@@ -1,0 +1,47 @@
+"""C1 — SpMV regime: step time is set by the bottleneck (max over bins and
+links), so minimizing the makespan beats minimizing total cut.
+
+One row per (graph, topology): modeled step time of the makespan
+partitioner vs the total-cut partitioner vs random, plus each method's
+native metric so the trade is visible both ways.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, spmv_step_time, timed
+from repro.core import baselines
+from repro.core.partitioner import PartitionConfig, partition
+from repro.core.topology import balanced_tree, production_tree
+from repro.graph.generators import grid2d, grid3d, rmat
+
+CASES = [
+    ("grid2d_64", lambda: grid2d(64, 64),
+     lambda: balanced_tree((2, 8), level_cost=(8.0, 1.0))),
+    ("grid3d_16", lambda: grid3d(16, 16, 16),
+     lambda: production_tree(2, 4, 4)),
+    ("rmat_20k", lambda: rmat(20000, 120000, seed=1),
+     lambda: balanced_tree((2, 8), level_cost=(8.0, 1.0))),
+]
+
+
+def run() -> None:
+    for name, mk_g, mk_t in CASES:
+        g, topo = mk_g(), mk_t()
+        res, secs = timed(partition, g, topo, PartitionConfig(seed=0))
+        cut, secs_cut = timed(baselines.total_cut_partition, g, topo.k)
+        rand = baselines.random_partition(g.n_nodes, topo.k, seed=0)
+        s_ours = spmv_step_time(g, topo, res.part)
+        s_cut = spmv_step_time(g, topo, cut)
+        s_rand = spmv_step_time(g, topo, rand)
+        emit("C1_makespan_vs_cut", name, secs,
+             step_ours=round(s_ours["step"], 1),
+             step_cut=round(s_cut["step"], 1),
+             step_rand=round(s_rand["step"], 1),
+             speedup_vs_cut=round(s_cut["step"] / s_ours["step"], 3),
+             cut_ours=round(s_ours["total_cut"], 1),
+             cut_cut=round(s_cut["total_cut"], 1))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Partitioner scalability: wall time and quality vs graph size and vs
+bin count k (the production tree is 512 compute bins)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import baselines
+from repro.core.partitioner import PartitionConfig, partition
+from repro.core.refine import RefineConfig
+from repro.core.topology import balanced_tree, production_tree
+from repro.graph.generators import grid2d, rmat
+
+
+def run() -> None:
+    # size scaling at k=32
+    topo = balanced_tree((2, 4, 4), level_cost=(8.0, 1.0, 1.0))
+    for n, m in [(10_000, 60_000), (100_000, 600_000),
+                 (400_000, 2_400_000)]:
+        g = rmat(n, m, seed=0)
+        cfg = PartitionConfig(seed=0, refine=RefineConfig(rounds=32))
+        res, secs = timed(partition, g, topo, cfg)
+        rand = baselines.random_partition(n, topo.k)
+        m_rand = baselines.score_all(g, topo, rand)["makespan"]
+        emit("scaling_size", f"rmat_n{n}", secs,
+             makespan=round(res.makespan, 1),
+             vs_random=round(m_rand / res.makespan, 2),
+             edges_per_sec=int(m / max(secs, 1e-9)))
+
+    # k scaling to the production tree (512 chips)
+    g = grid2d(256, 256)
+    for pods, rows, chips in [(1, 4, 4), (1, 16, 16), (2, 16, 16)]:
+        topo = production_tree(pods, rows, chips)
+        cfg = PartitionConfig(seed=0, refine=RefineConfig(rounds=24))
+        res, secs = timed(partition, g, topo, cfg)
+        emit("scaling_k", f"tree_{pods}x{rows}x{chips}", secs,
+             k=topo.k, makespan=round(res.makespan, 1),
+             comp_max=round(res.comp_max, 1),
+             comm_max=round(res.comm_max, 1))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""C2 — SpMSpV regime (frontier computations): on LOW-diameter graphs few
+high-volume rounds -> bottleneck objective helps; on HIGH-diameter graphs
+many small rounds -> the advantage dissolves (paper §1).
+
+BFS from random sources; per round, each active edge whose endpoints sit in
+different bins sends one unit along the tree path. Round time = max link
+load; total = sum over rounds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import baselines, reference
+from repro.core.partitioner import PartitionConfig, partition
+from repro.core.topology import balanced_tree
+from repro.graph.generators import grid2d, rmat
+from repro.graph.graph import Graph
+
+
+def bfs_round_cost(g: Graph, topo, part, source: int) -> float:
+    """Sum over BFS rounds of the bottleneck-link traffic of that round."""
+    n = g.n_nodes
+    dist = np.full(n, -1, np.int64)
+    dist[source] = 0
+    frontier = np.asarray([source])
+    total = 0.0
+    link_of_pair = {}
+    while frontier.size:
+        # active arcs = those leaving the frontier
+        starts = g.offsets[frontier]
+        ends = g.offsets[frontier + 1]
+        arcs = np.concatenate([np.arange(s, e) for s, e in
+                               zip(starts, ends)]) if frontier.size else []
+        dsts = g.receivers[arcs]
+        srcs = g.senders[arcs]
+        load = np.zeros(topo.n_links)
+        cross = part[srcs] != part[dsts]
+        for s, d in zip(srcs[cross], dsts[cross]):
+            key = (int(part[s]), int(part[d]))
+            if key not in link_of_pair:
+                link_of_pair[key] = reference.tree_path_links(
+                    topo, key[0], key[1])
+            for l in link_of_pair[key]:
+                load[l] += 1
+        total += (topo.F_l * load).max() if load.size else 0.0
+        new = dsts[dist[dsts] < 0]
+        dist[new] = 1
+        frontier = np.unique(new)
+    return total
+
+
+def run() -> None:
+    topo = balanced_tree((2, 4), level_cost=(6.0, 1.0))
+    for name, g in [("low_diam_rmat", rmat(4000, 24000, seed=3)),
+                    ("high_diam_grid", grid2d(64, 64))]:
+        ours = partition(g, topo, PartitionConfig(seed=0)).part
+        cut = baselines.total_cut_partition(g, topo.k)
+        rng = np.random.default_rng(0)
+        srcs = rng.integers(0, g.n_nodes, 3)
+        c_ours = np.mean([bfs_round_cost(g, topo, ours, int(s))
+                          for s in srcs])
+        c_cut = np.mean([bfs_round_cost(g, topo, cut, int(s))
+                         for s in srcs])
+        emit("C2_spmspv", name, 0.0,
+             frontier_cost_ours=round(float(c_ours), 1),
+             frontier_cost_cut=round(float(c_cut), 1),
+             ratio=round(float(c_cut / max(c_ours, 1e-9)), 3))
+
+
+if __name__ == "__main__":
+    run()

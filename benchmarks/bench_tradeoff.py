@@ -1,0 +1,51 @@
+"""C3 — the F trade-off: a single makespan objective with varying
+communication factor F sweeps out (load balance <-> communication)
+solutions; the fixed-balance-constraint baseline only reaches its one
+epsilon point. We report the Pareto frontier both methods achieve.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import baselines
+from repro.core.partitioner import PartitionConfig, partition
+from repro.core.topology import balanced_tree
+from repro.graph.generators import grid2d
+
+
+def run() -> None:
+    g = grid2d(48, 48)
+    mk = lambda F: balanced_tree((2, 4), F=F, level_cost=(6.0 * F, F))
+    pareto = []
+    for F in (0.05, 0.2, 1.0, 5.0):
+        topo = mk(F)
+        res = partition(g, topo, PartitionConfig(seed=0))
+        s = baselines.score_all(g, topo, res.part)
+        imb = s["imbalance"]
+        pareto.append((imb, s["comm_max"] / F))
+        emit("C3_tradeoff", f"makespan_F{F}", res.seconds,
+             imbalance=round(imb, 3),
+             bottleneck_comm=round(s["comm_max"] / F, 1),
+             makespan=round(s["makespan"], 1))
+    # fixed-epsilon cut baseline points
+    for eps in (0.03, 0.10):
+        cut = baselines.total_cut_partition(
+            g, 8, baselines.CutRefineConfig(imbalance=eps))
+        topo = mk(1.0)
+        s = baselines.score_all(g, topo, cut)
+        emit("C3_tradeoff", f"cut_eps{eps}", 0.0,
+             imbalance=round(s["imbalance"], 3),
+             bottleneck_comm=round(s["comm_max"], 1),
+             makespan=round(s["makespan"], 1))
+    # dominance check: increasing F must not increase bottleneck comm
+    comms = [c for _, c in pareto]
+    emit("C3_tradeoff", "monotonic_comm_with_F", 0.0,
+         monotone=bool(all(comms[i] >= comms[i + 1] - 1e-6
+                           for i in range(len(comms) - 1))))
+
+
+if __name__ == "__main__":
+    run()

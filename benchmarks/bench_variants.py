@@ -1,0 +1,58 @@
+"""§3.1 generalizations exercised end to end: routers, per-link F_l
+(fat tree), routing oracle + multipath (torus), vertex weights."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import baselines, objective, reference
+from repro.core.partitioner import PartitionConfig, partition
+from repro.core.topology import (fat_tree_topology, make_tree,
+                                 torus2d_topology)
+from repro.graph.generators import grid2d, rmat, weighted_nodes
+
+
+def run() -> None:
+    g = grid2d(32, 32)
+
+    # routers: star-of-stars with router interior
+    parent = [-1] + [0] * 4 + [1 + i // 4 for i in range(16)]
+    topo_r = make_tree(parent)
+    res, secs = timed(partition, g, topo_r, PartitionConfig(seed=0))
+    emit("variants", "routers_16bins", secs,
+         makespan=round(res.makespan, 1),
+         n_routers=int(topo_r.is_router.sum()))
+
+    # fat tree: F_l decreasing toward the root
+    topo_f = fat_tree_topology(16, arity=4, uplink_speedup=2.0)
+    res_f, secs = timed(partition, g, topo_f, PartitionConfig(seed=0))
+    flat_like = baselines.total_cut_partition(g, topo_f.k)
+    s_cut = baselines.score_all(g, topo_f, flat_like)
+    emit("variants", "fat_tree_Fl", secs,
+         makespan=round(res_f.makespan, 1),
+         makespan_cut_baseline=round(s_cut["makespan"], 1))
+
+    # routing oracle: torus, single vs multipath
+    g2 = rmat(2000, 9000, seed=4)
+    rng = np.random.default_rng(0)
+    for mp in (False, True):
+        topo_t = torus2d_topology(4, 4, multipath=mp)
+        part = rng.integers(0, topo_t.k, g2.n_nodes)
+        m, comp, comm = reference.makespan_routing_ref(part, g2, topo_t)
+        emit("variants", f"torus_multipath={mp}", 0.0,
+             makespan=round(m, 1), max_link=round(comm.max(), 1),
+             total_link=round(comm.sum(), 1))
+
+    # vertex weights
+    gw = weighted_nodes(rmat(3000, 15000, seed=5), seed=5, lo=0.1, hi=8.0)
+    from repro.core.topology import balanced_tree
+    topo_w = balanced_tree((4, 4))
+    res_w, secs = timed(partition, gw, topo_w, PartitionConfig(seed=0))
+    emit("variants", "vertex_weighted", secs,
+         makespan=round(res_w.makespan, 1),
+         perfect_balance=round(gw.node_weight.sum() / topo_w.k, 1),
+         comp_max=round(res_w.comp_max, 1))
+
+
+if __name__ == "__main__":
+    run()

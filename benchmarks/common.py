@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: modeled step times + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import baselines
+from repro.core.topology import TreeTopology
+
+ROWS: List[Dict] = []
+
+
+def emit(bench: str, name: str, seconds: float, **derived):
+    row = {"bench": bench, "name": name,
+           "us_per_call": round(seconds * 1e6, 1), **derived}
+    ROWS.append(row)
+    extras = " ".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{bench},{name},{row['us_per_call']},{extras}", flush=True)
+
+
+def spmv_step_time(g, topo: TreeTopology, part, t_comp: float = 1.0,
+                   t_byte: float = 1.0) -> Dict[str, float]:
+    """Modeled SpMV iteration time (the paper's SpMV regime): compute and
+    per-link communication overlap across nodes, so the step time is the
+    max over bins/links — exactly M(P) with F = t_byte/t_comp."""
+    s = baselines.score_all(g, topo, part)
+    step = max(s["comp_max"] * t_comp, s["comm_max"] * t_byte)
+    return {"step": step, **s}
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / repeat

@@ -1,0 +1,67 @@
+"""§Roofline table generator: reads results/dryrun/*.json (written by the
+multi-pod dry-run) and emits the per-(arch x shape x mesh) three-term
+roofline table as markdown + CSV."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(tag: str = "") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt(x, digits=3):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}e}" if (abs(x) < 1e-2 or abs(x) > 1e4) else \
+        f"{x:.{digits}f}"
+
+
+def table(rows: List[Dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | comp (s) | mem (s) | coll (s) | dominant | "
+           "bound (s) | roofline | useful | GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | N/A (skip: full "
+                       f"attention at 500k) | | | | | | | |")
+            continue
+        t = r["roofline_terms"]
+        mem_gb = (r["memory_analysis"].get("argument_bytes") or 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(t['compute_s'])} | "
+            f"{fmt(t['memory_s'])} | {fmt(t['collective_s'])} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{fmt(r['step_time_bound_s'])} | "
+            f"{fmt(r.get('roofline_fraction'), 2)} | "
+            f"{fmt(r.get('useful_ratio'), 2)} | {mem_gb:.2f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    rows = load()
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"# Roofline ({len(ok)} baselined cells)")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n## mesh {mesh}\n")
+        print(table(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

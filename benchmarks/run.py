@@ -1,0 +1,56 @@
+"""Benchmark suite driver: one section per paper table/claim.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``bench,name,us_per_call,derived...`` CSV rows; the roofline table
+(from the dry-run artifacts) is appended when results/dryrun is populated.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the large scaling benchmark")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_hierarchical, bench_makespan_vs_cut,
+                            bench_placement, bench_spmspv, bench_tradeoff,
+                            bench_variants)
+    suites = {
+        "C1": bench_makespan_vs_cut.run,
+        "C2": bench_spmspv.run,
+        "C3": bench_tradeoff.run,
+        "C4": bench_hierarchical.run,
+        "variants": bench_variants.run,
+        "placement": bench_placement.run,
+    }
+    if not args.fast:
+        from benchmarks import bench_scaling
+        suites["scaling"] = bench_scaling.run
+
+    print("bench,name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t = time.time()
+        fn()
+        print(f"# {name} done in {time.time() - t:.1f}s", flush=True)
+
+    results = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+    if os.path.isdir(results) and os.listdir(results):
+        from benchmarks import roofline
+        print()
+        roofline.main()
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

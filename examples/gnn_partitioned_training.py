@@ -1,0 +1,62 @@
+"""The paper's flagship integration: partition a graph with the makespan
+objective over the machine tree, permute node arrays into bin blocks, and
+train a GIN on the placed graph. Reports the halo-exchange volume per link
+(= the paper's comm(l)) before/after.
+
+    PYTHONPATH=src python examples/gnn_partitioned_training.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines
+from repro.core.mapping import apply_placement, block_placement
+from repro.core.partitioner import PartitionConfig, partition
+from repro.core.topology import production_tree
+from repro.data import pipeline
+from repro.dist.sharding import gnn_rules
+from repro.graph.generators import rmat
+from repro.models import gnn
+from repro.optim import adamw
+from repro.train.steps import make_train_step
+
+g = rmat(2000, 12000, seed=0)
+topo = production_tree(2, 2, 4)     # 2 pods x 2 rows x 4 chips
+res = partition(g, topo, PartitionConfig(seed=0))
+rand = baselines.random_partition(g.n_nodes, topo.k)
+s_ours = baselines.score_all(g, topo, res.part)
+s_rand = baselines.score_all(g, topo, rand)
+print(f"halo bottleneck (comm_max): partitioned={s_ours['comm_max']:.0f} "
+      f"vs hashed={s_rand['comm_max']:.0f} "
+      f"({s_rand['comm_max']/s_ours['comm_max']:.1f}x less traffic on the "
+      f"hottest link)")
+
+pl = block_placement(res.part, topo.k)
+g2 = apply_placement(g, pl)
+feats = pipeline.gnn_features(g, 32, 8, seed=0)
+x = np.zeros((pl.n_pad, 32), np.float32)
+x[pl.perm] = feats["x"]
+labels = np.zeros(pl.n_pad, np.int32)
+labels[pl.perm] = feats["labels"]
+mask = np.zeros(pl.n_pad, np.float32)
+mask[pl.perm] = 1.0
+batch = {"x": jnp.asarray(x), "labels": jnp.asarray(labels),
+         "label_mask": jnp.asarray(mask),
+         "senders": jnp.asarray(g2.senders),
+         "receivers": jnp.asarray(g2.receivers),
+         "edge_weight": jnp.asarray(g2.edge_weight),
+         "degrees": jnp.asarray(g2.degrees().astype(np.float32))}
+
+cfg = gnn.GNNConfig(name="gin", kind="gin", n_layers=3, d_hidden=64,
+                    d_in=32, n_classes=8)
+rules = gnn_rules(())
+params, _ = gnn.init(jax.random.PRNGKey(0), cfg, rules)
+ocfg = adamw.AdamWConfig(lr=3e-3, total_steps=80, warmup_steps=0)
+opt = adamw.init(params, ocfg)
+step = jax.jit(make_train_step(
+    lambda p, b: gnn.loss_fn(p, b, cfg, rules), ocfg))
+losses = []
+for i in range(80):
+    params, opt, m = step(params, opt, batch)
+    losses.append(float(m["loss"]))
+print(f"GIN on the placed graph: loss {losses[0]:.3f} -> {losses[-1]:.3f}")

@@ -1,0 +1,59 @@
+"""End-to-end driver: train a ~100M-parameter transformer for a few hundred
+steps on the synthetic token pipeline, with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm_100m.py [--steps 300]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import pipeline
+from repro.dist.sharding import lm_rules
+from repro.models import transformer as tr
+from repro.optim import adamw
+from repro.train import loop
+from repro.train.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    cfg = tr.TransformerConfig(
+        name="lm-100m", n_layers=12, d_model=512, n_heads=8, n_kv_heads=4,
+        d_ff=2048, vocab=49152, qkv_bias=False, dtype=jnp.float32,
+        remat=False, q_chunk=128, kv_chunk=128)   # ~97M params
+    rules = lm_rules(())
+    params, _ = tr.init(jax.random.PRNGKey(0), cfg, rules)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"model: {n/1e6:.1f}M params")
+
+    ocfg = adamw.AdamWConfig(lr=1e-3, total_steps=args.steps,
+                             warmup_steps=20)
+    opt = adamw.init(params, ocfg)
+    step = jax.jit(make_train_step(
+        lambda p, b: tr.loss_fn(p, b, cfg, rules), ocfg))
+
+    def batches():
+        for b in pipeline.lm_batches(cfg.vocab, args.batch, args.seq,
+                                     seed=0):
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    lcfg = loop.LoopConfig(total_steps=args.steps, ckpt_every=100,
+                           ckpt_dir=args.ckpt_dir, log_every=20)
+    params, opt, result = loop.run(step, params, opt, batches(), lcfg)
+    ls = result.losses
+    print(f"loss: {ls[0]:.3f} -> {np.mean(ls[-10:]):.3f} over "
+          f"{result.steps_run} steps in {result.seconds:.0f}s "
+          f"(resumed_from={result.resumed_from})")
+    assert np.mean(ls[-10:]) < ls[0], "model failed to learn"
+
+
+if __name__ == "__main__":
+    main()

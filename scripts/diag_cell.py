@@ -1,0 +1,108 @@
+"""Per-instruction diagnosis of one dry-run cell: top collectives and top
+HBM-byte contributors, trip-scaled. The §Perf hypothesis generator.
+
+    PYTHONPATH=src python scripts/diag_cell.py --arch qwen2-72b \
+        --shape train_4k --profile sp [--override ep_shard_map=1]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+
+import argparse  # noqa: E402
+import re        # noqa: E402
+
+import jax       # noqa: E402
+
+from repro import configs                         # noqa: E402
+from repro.launch import hlo_cost as hc           # noqa: E402
+from repro.launch import mesh as mesh_lib         # noqa: E402
+from repro.launch.dryrun import (_compile, _group_size, _link_bytes,  # noqa
+                                 _RESULT_RE)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--profile", default="2d")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+    overrides = {"q_chunk": 0}
+    for kv in args.override:
+        k, v = kv.split("=")
+        overrides[k] = int(v)
+
+    arch = configs.get(args.arch)
+    mesh = mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
+    chips = mesh.devices.size
+    cell, comp = _compile(arch, arch.shapes[args.shape], mesh, overrides,
+                          profile=args.profile)
+    hlo = comp.as_text()
+    comps, entry = hc.parse(hlo)
+    mult = hc.multipliers(comps, entry)
+
+    byte_rows, coll_rows = [], []
+    cur = None
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        hm = hc._HEADER_RE.match(s)
+        if hm and s.endswith("{"):
+            cur = hm.group(2)
+            continue
+        if cur is None or cur not in comps:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        dm = hc._DEF_RE.match(s)
+        if not dm:
+            continue
+        rest = dm.group(2)
+        op_m = re.search(r"\s([\w\-]+)\(", rest)
+        if not op_m:
+            continue
+        opcode = op_m.group(1)
+        elems, nbytes = hc._elems_bytes(rest[: op_m.start()])
+        c = comps[cur]
+        body = rest[op_m.end():]
+        depth, end = 1, 0
+        for i, ch in enumerate(body):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = hc._OPERANDS_RE.findall(body[:end])
+        ob = sum(c.nbytes.get(o, 0) for o in operands)
+        m = mult.get(cur, 0)
+        if opcode in hc._TIGHT_HBM:
+            byte_rows.append((m * (nbytes + ob), m, opcode, s[:95]))
+        rm = _RESULT_RE.search(s)
+        if rm:
+            gs = _group_size(s, chips)
+            link, _ = _link_bytes(rm.group(2), nbytes, gs)
+            coll_rows.append((m * link, m, rm.group(2), gs, s[:95]))
+
+    print(f"\n== top collectives (link bytes x mult) ==")
+    coll_rows.sort(reverse=True)
+    for r in coll_rows[: args.top]:
+        print(f"{r[0]:.2e} x{r[1]:<5.0f} {r[2]:<18} gs={r[3]:<3} {r[4][:70]}")
+    print(f"total coll: {sum(r[0] for r in coll_rows):.3e} "
+          f"-> {sum(r[0] for r in coll_rows)/50e9:.2f}s")
+
+    print(f"\n== top HBM bytes (tight set) ==")
+    byte_rows.sort(reverse=True)
+    for r in byte_rows[: args.top]:
+        print(f"{r[0]:.2e} x{r[1]:<5.0f} {r[2]:<22} {r[3][:70]}")
+    print(f"total tight: {sum(r[0] for r in byte_rows):.3e} "
+          f"-> {sum(r[0] for r in byte_rows)/819e9:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

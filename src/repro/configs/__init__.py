@@ -1,0 +1,30 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+10 assigned architectures (5 LM + 4 GNN + 1 recsys), each with its full
+config, shape grid, reduced smoke config and model-FLOPs accounting.
+"""
+from repro.configs import (chatglm3_6b, deepseek_v2_236b,
+                           deepseek_v2_lite_16b, equiformer_v2, gin_tu,
+                           meshgraphnet, pna, qwen2_1_5b, qwen2_72b,
+                           two_tower_retrieval)
+
+REGISTRY = {a.ARCH.name: a.ARCH for a in (
+    deepseek_v2_236b, deepseek_v2_lite_16b, chatglm3_6b, qwen2_72b,
+    qwen2_1_5b, equiformer_v2, pna, gin_tu, meshgraphnet,
+    two_tower_retrieval)}
+
+
+def get(name: str):
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: "
+                       f"{sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def all_cells():
+    """Every (arch, shape) pair — the 40-cell grid (incl. skips)."""
+    out = []
+    for arch in REGISTRY.values():
+        for shape in arch.shapes.values():
+            out.append((arch, shape))
+    return out

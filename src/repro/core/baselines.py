@@ -1,0 +1,147 @@
+"""Baseline partitioners the paper compares the makespan objective against.
+
+* ``total_cut_partition`` — classic multilevel total-cut minimization with a
+  hard balance constraint (the KaHIP/Metis objective), built on the same
+  coarsening but with cut-gain label propagation. This is the C1/C2/C3
+  comparison point.
+* ``flat_twice_partition`` — the Lynx code's emulation of hierarchy
+  (Ref. [17]): conventional flat partitioning applied twice (pods first,
+  then chips within each pod), ignoring link costs. C4 comparison point.
+* ``random_partition`` (re-exported) — sanity floor.
+
+All return plain assignments; scoring (makespan / total cut / max cvol) is
+done by the caller so every method is judged under every metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import objective
+from repro.core.coarsen import coarsen
+from repro.core.initial import initial_partition, random_partition  # noqa: F401
+from repro.core.topology import TreeTopology, flat_topology
+from repro.graph.graph import Graph, subgraph
+
+
+@dataclasses.dataclass(frozen=True)
+class CutRefineConfig:
+    rounds: int = 64
+    damping: float = 0.5
+    imbalance: float = 0.05     # hard balance constraint epsilon
+    seed: int = 0
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rounds", "damping",
+                                             "imbalance"))
+def _cut_refine_jit(part0, senders, receivers, edge_weight, node_weight, key,
+                    *, k, rounds, damping, imbalance):
+    """Label-propagation refinement of the TOTAL CUT under a hard balance
+    constraint: move v to the neighbor-heaviest bin when it reduces cut and
+    keeps every bin below (1 + eps) * avg."""
+    n = part0.shape[0]
+    total_w = node_weight.sum()
+    cap = (1.0 + imbalance) * total_w / k
+
+    def body(state, _):
+        part, key = state
+        key, k_gate, k_thin = jax.random.split(key, 3)
+        flat = jax.ops.segment_sum(
+            edge_weight, senders.astype(jnp.int32) * k
+            + part[receivers].astype(jnp.int32), num_segments=n * k)
+        conn = flat.reshape(n, k)
+        own = jnp.take_along_axis(conn, part[:, None].astype(jnp.int32), 1)[:, 0]
+        conn_masked = conn.at[jnp.arange(n), part].set(-jnp.inf)
+        cand = jnp.argmax(conn_masked, axis=1).astype(part.dtype)
+        gain = jnp.take_along_axis(conn, cand[:, None].astype(jnp.int32), 1)[:, 0] - own
+        comp = jax.ops.segment_sum(node_weight, part, num_segments=k)
+        want = (gain > 0) & (jax.random.uniform(k_gate, (n,)) < damping)
+        inflow = jax.ops.segment_sum(jnp.where(want, node_weight, 0.0), cand,
+                                     num_segments=k)
+        room = jnp.maximum(cap - comp, 0.0)
+        ratio = jnp.where(inflow > 0,
+                          jnp.minimum(room / jnp.maximum(inflow, 1e-9), 1.0), 0.0)
+        keep = want & (jax.random.uniform(k_thin, (n,)) < ratio[cand])
+        part = jnp.where(keep, cand, part)
+        return (part, key), None
+
+    (part, _), _ = jax.lax.scan(body, (part0, key), None, length=rounds)
+    return part
+
+
+def total_cut_partition(g: Graph, k: int,
+                        cfg: Optional[CutRefineConfig] = None,
+                        coarse_factor: int = 24) -> np.ndarray:
+    """Multilevel total-cut partitioner (balance-constrained)."""
+    cfg = cfg or CutRefineConfig()
+    levels = coarsen(g, k, seed=cfg.seed, coarse_factor=coarse_factor)
+    coarsest = levels[-1].graph
+    part = initial_partition(coarsest, flat_topology(k), seed=cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    for li in range(len(levels) - 1, -1, -1):
+        lg = levels[li].graph
+        part = np.asarray(_cut_refine_jit(
+            jnp.asarray(part, dtype=jnp.int32), jnp.asarray(lg.senders),
+            jnp.asarray(lg.receivers), jnp.asarray(lg.edge_weight),
+            jnp.asarray(lg.node_weight), key, k=k, rounds=cfg.rounds,
+            damping=cfg.damping, imbalance=cfg.imbalance))
+        if li > 0:
+            part = part[levels[li - 1].fine_to_coarse]
+    return part
+
+
+def flat_twice_partition(g: Graph, topo: TreeTopology,
+                         cfg: Optional[CutRefineConfig] = None) -> np.ndarray:
+    """Hierarchy emulation via two flat total-cut partitionings: split the
+    graph across the root's children, then split each child's subgraph across
+    its own leaves. Matches how Lynx emulated hierarchical partitioning."""
+    cfg = cfg or CutRefineConfig()
+    root = int(np.nonzero(topo.parent < 0)[0][0])
+    kids = [int(c) for c in topo.children(root)]
+    groups = [topo.leaves_under(c) for c in kids]
+    groups = [gr for gr in groups if gr.size > 0]
+    part = np.zeros(g.n_nodes, dtype=np.int32)
+    if len(groups) == 1:
+        top = np.zeros(g.n_nodes, dtype=np.int32)
+    else:
+        top = total_cut_partition(g, len(groups), cfg)
+    for gi, bins in enumerate(groups):
+        nodes = np.nonzero(top == gi)[0]
+        if nodes.size == 0:
+            continue
+        if bins.size == 1:
+            part[nodes] = bins[0]
+            continue
+        sg = subgraph(g, nodes)
+        sub = total_cut_partition(sg, bins.size, cfg)
+        part[nodes] = bins[sub]
+    return part
+
+
+def score_all(g: Graph, topo: TreeTopology, part: np.ndarray) -> dict:
+    """Uniform scorecard: makespan / comp_max / comm_max / total cut /
+    max communication volume — every baseline judged under every metric."""
+    p = jnp.asarray(part, dtype=jnp.int32)
+    br = objective.makespan_tree(
+        p, jnp.asarray(g.senders), jnp.asarray(g.receivers),
+        jnp.asarray(g.edge_weight), jnp.asarray(g.node_weight),
+        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), k=topo.k)
+    W = objective.quotient_matrix(p, jnp.asarray(g.senders),
+                                  jnp.asarray(g.receivers),
+                                  jnp.asarray(g.edge_weight), topo.k)
+    cvol = objective.comm_volumes(p, jnp.asarray(g.senders),
+                                  jnp.asarray(g.receivers),
+                                  jnp.asarray(g.node_weight), topo.k)
+    return {
+        "makespan": float(br.makespan),
+        "comp_max": float(br.comp_max),
+        "comm_max": float(br.comm_max),
+        "total_cut": float(objective.total_cut(W)),
+        "max_cvol": float(jnp.max(cvol)),
+        "imbalance": float(br.comp_max / (g.total_node_weight() / topo.k)) - 1.0,
+    }

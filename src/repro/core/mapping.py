@@ -1,0 +1,225 @@
+"""From partition to placement: the glue between the paper's objective and
+the JAX distribution layer.
+
+Two consumers (DESIGN.md §2):
+
+1. **Block placement** (GNN node arrays, embedding-table rows): JAX shards
+   arrays in contiguous equal blocks, so an arbitrary assignment ``part`` is
+   realized by *permuting* rows such that block ``i`` of the sharded array
+   holds exactly the vertices mapped to bin ``i`` (bins padded to the common
+   block size). After the permutation, a plain ``NamedSharding`` places the
+   partitioner's decision — no custom collectives.
+
+2. **Logical-mesh -> physical-topology mapping** (dense transformers): the
+   compiled HLO gives per-collective traffic over logical mesh axes; we build
+   the device-pair traffic matrix, then score candidate logical->physical
+   assignments with the paper's makespan objective over the machine tree.
+   Candidates: axis permutations x per-axis orders (identity / blocked /
+   Gray). This is classic process mapping with the paper's bottleneck metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import objective
+from repro.core.topology import TreeTopology
+from repro.graph.graph import Graph
+
+
+# ---------------------------------------------------------------------------
+# 1. Block placement
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlacement:
+    perm: np.ndarray        # [n_pad] new position of each (padded) vertex
+    inverse: np.ndarray     # [n_pad] vertex at each new position
+    n_pad: int              # padded length = block * k
+    block: int              # rows per bin
+    bin_of_row: np.ndarray  # [n_pad] bin owning each new position
+    fill: np.ndarray        # [k] real vertices per bin (rest is padding)
+
+
+def block_placement(part: np.ndarray, k: int) -> BlockPlacement:
+    """Permutation aligning bins with contiguous equal-size blocks.
+
+    Bin loads are generally unequal; the block size is the max bin load
+    (rounded up to a multiple of 8 for TPU-friendly sublanes) and smaller
+    bins are padded with sentinel rows. The memory overhead is bounded by
+    the partitioner's balance — another reason the comp term matters.
+    """
+    part = np.asarray(part)
+    n = part.shape[0]
+    counts = np.bincount(part, minlength=k)
+    block = int(max(counts.max(), 1))
+    block = (block + 7) // 8 * 8
+    n_pad = block * k
+    order = np.argsort(part, kind="stable")      # vertices grouped by bin
+    inverse = np.full(n_pad, n, dtype=np.int64)  # n = sentinel (padding)
+    write = 0
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for b in range(k):
+        seg = order[starts[b]:starts[b + 1]]
+        inverse[b * block: b * block + seg.shape[0]] = seg
+        write += seg.shape[0]
+    perm = np.full(n_pad, -1, dtype=np.int64)
+    real = inverse < n
+    perm_positions = np.nonzero(real)[0]
+    perm_vertices = inverse[real]
+    perm_full = np.full(n + 1, n_pad - 1, dtype=np.int64)
+    perm_full[perm_vertices] = perm_positions
+    return BlockPlacement(
+        perm=perm_full[:n], inverse=inverse, n_pad=n_pad, block=block,
+        bin_of_row=np.repeat(np.arange(k), block),
+        fill=counts.astype(np.int64))
+
+
+def apply_placement(g: Graph, pl: BlockPlacement) -> Graph:
+    """Relabel graph arrays into placement order (padding rows isolated)."""
+    from repro.graph.graph import Graph as _G
+    s = pl.perm[g.senders]
+    r = pl.perm[g.receivers]
+    nw = np.zeros(pl.n_pad, dtype=np.float32)
+    nw[pl.perm] = g.node_weight
+    order = np.argsort(s, kind="stable")
+    offsets = np.zeros(pl.n_pad + 1, dtype=np.int64)
+    np.add.at(offsets, s + 1, 1)
+    return _G(pl.n_pad, s[order].astype(np.int32), r[order].astype(np.int32),
+              g.edge_weight[order], nw, np.cumsum(offsets))
+
+
+# ---------------------------------------------------------------------------
+# 2. Logical-mesh -> physical mapping
+# ---------------------------------------------------------------------------
+
+def collective_traffic_matrix(mesh_shape: Sequence[int],
+                              axis_bytes: Dict[int, float]) -> np.ndarray:
+    """Device-pair traffic matrix [D, D] from per-axis collective bytes.
+
+    ``axis_bytes[a]`` = bytes each device exchanges along logical axis ``a``
+    per step (from the HLO collective scan in benchmarks/roofline.py). The
+    ring model charges ``bytes / (size - 1)`` to each of a device's ring
+    neighbors along that axis.
+    """
+    shape = tuple(mesh_shape)
+    d = int(np.prod(shape))
+    ids = np.arange(d).reshape(shape)
+    T = np.zeros((d, d), dtype=np.float64)
+    for ax, nbytes in axis_bytes.items():
+        size = shape[ax]
+        if size <= 1 or nbytes <= 0:
+            continue
+        per_pair = nbytes / (size - 1)
+        fwd = np.roll(ids, -1, axis=ax)
+        a = ids.ravel()
+        b = fwd.ravel()
+        T[a, b] += per_pair
+        T[b, a] += per_pair
+    return T
+
+
+def _gray(n: int) -> np.ndarray:
+    g = np.arange(n) ^ (np.arange(n) >> 1)
+    return np.argsort(g, kind="stable")
+
+
+def _axis_orders(size: int) -> List[np.ndarray]:
+    orders = [np.arange(size)]
+    if size >= 4:
+        orders.append(_gray(size))
+        half = size // 2
+        blocked = np.concatenate([np.arange(half) * 2,
+                                  np.arange(half) * 2 + 1])[:size]
+        orders.append(np.argsort(blocked, kind="stable"))
+    return orders
+
+
+def makespan_of_device_map(T: np.ndarray, topo: TreeTopology,
+                           device_to_bin: np.ndarray) -> float:
+    """Score a device->bin assignment: bottleneck link under traffic T.
+    comp is uniform (SPMD: one shard per device), so the comm term decides."""
+    import jax.numpy as jnp
+    d = T.shape[0]
+    iu = np.triu_indices(d, 1)
+    w = T[iu]
+    nz = w > 0
+    senders = iu[0][nz].astype(np.int32)
+    receivers = iu[1][nz].astype(np.int32)
+    s2 = np.concatenate([senders, receivers])
+    r2 = np.concatenate([receivers, senders])
+    w2 = np.concatenate([w[nz], w[nz]]).astype(np.float32)
+    br = objective.makespan_tree(
+        jnp.asarray(device_to_bin, dtype=jnp.int32), jnp.asarray(s2),
+        jnp.asarray(r2), jnp.asarray(w2),
+        jnp.zeros(d, dtype=jnp.float32),  # comp term excluded (uniform)
+        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), k=topo.k)
+    return float(br.comm_max)
+
+
+@dataclasses.dataclass
+class MeshMapping:
+    axis_perm: Tuple[int, ...]
+    axis_orders: Tuple[int, ...]   # index into _axis_orders per (new) axis
+    device_to_bin: np.ndarray
+    bottleneck: float
+
+
+def search_mesh_mapping(mesh_shape: Sequence[int],
+                        axis_bytes: Dict[int, float],
+                        topo: TreeTopology,
+                        max_axis_perms: Optional[int] = None) -> MeshMapping:
+    """Enumerate logical-axis permutations x per-axis orders; return the
+    assignment with the smallest bottleneck-link traffic cost.
+
+    The machine tree's leaves are taken in natural order; a candidate maps
+    logical device (i_0, .., i_r) to leaf number ``mixed-radix index`` after
+    permuting/reordering axes.
+    """
+    shape = tuple(mesh_shape)
+    d = int(np.prod(shape))
+    if topo.k != d:
+        raise ValueError(f"topology has {topo.k} bins, mesh has {d} devices")
+    T = collective_traffic_matrix(shape, axis_bytes)
+    best: Optional[MeshMapping] = None
+    perms = list(itertools.permutations(range(len(shape))))
+    if max_axis_perms:
+        perms = perms[:max_axis_perms]
+    for perm in perms:
+        new_shape = tuple(shape[p] for p in perm)
+        order_choices = [range(len(_axis_orders(s))) for s in new_shape]
+        for orders_idx in itertools.product(*order_choices):
+            # position of logical device in leaf order
+            maps = [_axis_orders(s)[oi] for s, oi in zip(new_shape, orders_idx)]
+            ids = np.arange(d).reshape(shape)
+            ids_p = np.transpose(ids, perm)
+            for ax, mp in enumerate(maps):
+                ids_p = np.take(ids_p, mp, axis=ax)
+            # leaf j holds logical device ids_p.ravel()[j]
+            device_to_bin = np.empty(d, dtype=np.int64)
+            device_to_bin[ids_p.ravel()] = np.arange(d)
+            cost = makespan_of_device_map(T, topo, device_to_bin)
+            if best is None or cost < best.bottleneck:
+                best = MeshMapping(perm, orders_idx, device_to_bin, cost)
+    assert best is not None
+    return best
+
+
+def expert_placement(traffic: np.ndarray, expert_flops: np.ndarray,
+                     topo: TreeTopology, seed: int = 0):
+    """MoE expert placement: experts = vertices (weight = FLOPs share),
+    expert-pair token traffic = edges; returns expert->bin assignment via the
+    full multilevel partitioner. [paper technique, vertex-weighted variant]"""
+    from repro.core.partitioner import PartitionConfig, partition
+    from repro.graph.graph import from_edges
+    e = traffic.shape[0]
+    iu = np.triu_indices(e, 1)
+    w = traffic[iu] + traffic.T[iu]
+    nz = w > 0
+    g = from_edges(e, iu[0][nz], iu[1][nz], w[nz].astype(np.float32),
+                   expert_flops.astype(np.float32))
+    res = partition(g, topo, PartitionConfig(seed=seed))
+    return res.part, res

@@ -1,0 +1,278 @@
+"""Machine topologies for the graph-constrained makespan partitioning problem.
+
+The paper's base formulation takes a tree ``C = (B, L)``; generalizations add
+routers (bins with zero compute capacity), per-link cost factors ``F_l``, and
+non-tree routing graphs with a routing oracle (optionally multipath).
+
+TPU-native representation: for trees we never materialize per-pair paths.
+Link ``l`` (the edge between node ``c`` and ``parent(c)``) lies on
+``path(i, j)`` iff exactly one of ``i, j`` is in ``subtree(c)``, so the whole
+objective reduces to GEMMs against the subtree indicator ``S`` (see
+``objective.py``). For non-tree routing oracles we materialize the fractional
+path-incidence tensor ``R[i, j, l]`` (small bin counts only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeTopology:
+    """Tree machine model.
+
+    Nodes ``0..n_nodes-1``; ``parent[root] = -1``. Compute bins are the
+    non-router nodes (typically the leaves); routers are the paper's
+    interconnect generalization. ``link_cost[c]`` is the per-unit cost factor
+    ``F_l`` of the link (c, parent[c]) — the edge-weighted generalization; the
+    basic problem uses ``F_l = F`` for all links.
+    """
+
+    parent: np.ndarray        # [n_nodes] int32
+    is_router: np.ndarray     # [n_nodes] bool
+    link_cost: np.ndarray     # [n_nodes] float32; entry at root unused
+    # Derived (built by __post_init__ helpers):
+    compute_bins: np.ndarray  # [k] node ids that can take load
+    subtree: np.ndarray       # [n_links, k] float32 indicator
+    link_nodes: np.ndarray    # [n_links] child-node id of each link
+    F_l: np.ndarray           # [n_links] float32 per-link cost factors
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.parent.shape[0])
+
+    @property
+    def n_links(self) -> int:
+        return int(self.link_nodes.shape[0])
+
+    @property
+    def k(self) -> int:
+        return int(self.compute_bins.shape[0])
+
+    def depth(self, node: int) -> int:
+        d = 0
+        while self.parent[node] >= 0:
+            node = int(self.parent[node])
+            d += 1
+        return d
+
+    def children(self, node: int) -> np.ndarray:
+        return np.nonzero(self.parent == node)[0]
+
+    def leaves_under(self, node: int) -> np.ndarray:
+        """Compute bins in the subtree rooted at ``node`` (in bin index space)."""
+        in_sub = _subtree_mask(self.parent, node)
+        return np.nonzero(in_sub[self.compute_bins])[0]
+
+    def distance_matrix(self) -> np.ndarray:
+        """[k, k] cost-weighted tree distance between compute bins:
+        ``dist[a, b] = sum_{l in path(a,b)} F_l``. Via the XOR identity."""
+        S, f = self.subtree, self.F_l[:, None]
+        u = (f * S).sum(0)                      # [k]
+        cross = S.T @ (f * S)                   # [k, k]
+        return u[:, None] + u[None, :] - 2.0 * cross
+
+
+def _subtree_mask(parent: np.ndarray, node: int) -> np.ndarray:
+    n = parent.shape[0]
+    mask = np.zeros(n, dtype=bool)
+    mask[node] = True
+    # parent[] is arbitrary order; iterate to fixpoint (tree depth bounded)
+    for _ in range(n):
+        new = mask.copy()
+        valid = parent >= 0
+        new[valid] |= mask[parent[valid]]
+        if (new == mask).all():
+            break
+        mask = new
+    return mask
+
+
+def make_tree(parent: Sequence[int], is_router: Optional[Sequence[bool]] = None,
+              link_cost: Optional[Sequence[float]] = None, F: float = 1.0) -> TreeTopology:
+    parent = np.asarray(parent, dtype=np.int32)
+    n = parent.shape[0]
+    roots = np.nonzero(parent < 0)[0]
+    if roots.shape[0] != 1:
+        raise ValueError(f"tree must have exactly one root, got {roots}")
+    if is_router is None:
+        # default: internal nodes are routers, leaves compute
+        has_child = np.zeros(n, dtype=bool)
+        has_child[parent[parent >= 0]] = True
+        is_router = has_child
+    is_router = np.asarray(is_router, dtype=bool)
+    if link_cost is None:
+        link_cost = np.full(n, F, dtype=np.float32)
+    link_cost = np.asarray(link_cost, dtype=np.float32)
+    compute_bins = np.nonzero(~is_router)[0].astype(np.int32)
+    if compute_bins.shape[0] == 0:
+        raise ValueError("topology has no compute bins")
+    link_nodes = np.nonzero(parent >= 0)[0].astype(np.int32)
+    S = np.zeros((link_nodes.shape[0], compute_bins.shape[0]), dtype=np.float32)
+    for li, c in enumerate(link_nodes):
+        S[li] = _subtree_mask(parent, int(c))[compute_bins]
+    return TreeTopology(
+        parent=parent, is_router=is_router, link_cost=link_cost,
+        compute_bins=compute_bins, subtree=S, link_nodes=link_nodes,
+        F_l=link_cost[link_nodes],
+    )
+
+
+def flat_topology(k: int, F: float = 1.0) -> TreeTopology:
+    """Star: one router root, k compute leaves. Equivalent to classic k-way
+    partitioning where comm(l) is the communication volume of bin l."""
+    parent = np.concatenate([[-1], np.zeros(k, dtype=np.int64)])
+    return make_tree(parent, F=F)
+
+
+def balanced_tree(branching: Sequence[int], F: float = 1.0,
+                  level_cost: Optional[Sequence[float]] = None) -> TreeTopology:
+    """Balanced hierarchy, e.g. ``branching=(2, 16, 16)`` = 2 pods x 16 rows x
+    16 chips. ``level_cost[i]`` is F_l for links from level i to level i+1
+    nodes (root = level 0); defaults to F everywhere."""
+    parent: List[int] = [-1]
+    level_nodes = [[0]]
+    for lvl, b in enumerate(branching):
+        nxt = []
+        for p in level_nodes[-1]:
+            for _ in range(b):
+                parent.append(p)
+                nxt.append(len(parent) - 1)
+        level_nodes.append(nxt)
+    parent_arr = np.asarray(parent, dtype=np.int32)
+    cost = np.full(len(parent), F, dtype=np.float32)
+    if level_cost is not None:
+        for lvl, nodes in enumerate(level_nodes[1:]):
+            cost[np.asarray(nodes)] = level_cost[min(lvl, len(level_cost) - 1)]
+    return make_tree(parent_arr, link_cost=cost, F=F)
+
+
+# Production machine model (DESIGN.md §6): TPU v5e-class pods.
+#   root -(DCN)- pod -(ICI row links)- row -(ICI chip links)- chip
+# F_l is cost per byte relative to compute cost of one vertex; the DCN/ICI
+# asymmetry is what makes pod-aware mapping matter.
+ICI_GBPS = 50.0
+DCN_GBPS = 6.25
+
+
+def production_tree(n_pods: int = 2, rows: int = 16, chips: int = 16,
+                    F: float = 1.0) -> TreeTopology:
+    rel = ICI_GBPS / DCN_GBPS
+    return balanced_tree((n_pods, rows, chips), F=F,
+                         level_cost=(F * rel, F, F))
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingTopology:
+    """Routing-graph generalization: arbitrary interconnect + routing oracle.
+
+    ``path_incidence[i, j, l]`` is the fraction of (i, j) traffic crossing
+    link ``l`` (1.0 for single-path oracles; 1/k per path for k-way multipath).
+    Dense [k, k, L]: intended for small machine models (k <= ~64); the
+    production tree uses :class:`TreeTopology`.
+    """
+
+    k: int
+    n_links: int
+    path_incidence: np.ndarray  # [k, k, L] float32
+    F_l: np.ndarray             # [L] float32
+
+    def distance_matrix(self) -> np.ndarray:
+        return np.einsum("ijl,l->ij", self.path_incidence, self.F_l)
+
+
+def routing_from_paths(k: int, n_links: int,
+                       paths: dict, F_l: Optional[np.ndarray] = None) -> RoutingTopology:
+    """``paths[(i, j)]`` is a list of paths, each a list of link ids; traffic
+    splits evenly across the listed paths (multipath oracle)."""
+    R = np.zeros((k, k, n_links), dtype=np.float32)
+    for (i, j), plist in paths.items():
+        for p in plist:
+            for l in p:
+                R[i, j, l] += 1.0 / len(plist)
+                R[j, i, l] += 1.0 / len(plist)
+    if F_l is None:
+        F_l = np.ones(n_links, dtype=np.float32)
+    return RoutingTopology(k=k, n_links=n_links, path_incidence=R,
+                           F_l=np.asarray(F_l, dtype=np.float32))
+
+
+def torus2d_topology(nx: int, ny: int, F: float = 1.0,
+                     multipath: bool = False) -> RoutingTopology:
+    """2D torus with X-then-Y dimension-ordered routing (the BlueGene-style
+    interconnect of the paper's related work). With ``multipath`` the oracle
+    returns both X-then-Y and Y-then-X, splitting traffic 1/2 each."""
+    k = nx * ny
+    # links: for each node, +x and +y ring links
+    def node(x, y):
+        return (x % nx) * ny + (y % ny)
+
+    link_id = {}
+    for x in range(nx):
+        for y in range(ny):
+            link_id[("x", x, y)] = len(link_id)   # node(x,y) -> node(x+1,y)
+            link_id[("y", x, y)] = len(link_id)   # node(x,y) -> node(x,y+1)
+
+    def ring_hops(a, b, n):
+        """Shortest ring direction from a to b: list of (start, step)."""
+        fwd = (b - a) % n
+        bwd = (a - b) % n
+        hops = []
+        if fwd <= bwd:
+            for t in range(fwd):
+                hops.append(((a + t) % n, +1))
+        else:
+            for t in range(bwd):
+                hops.append(((a - t - 1) % n, +1))  # link stored at lower end
+        return hops
+
+    def route(ax, ay, bx, by, order):
+        links = []
+        cx, cy = ax, ay
+        for dim in order:
+            if dim == "x":
+                for (pos, _s) in ring_hops(cx, bx, nx):
+                    links.append(link_id[("x", pos, cy)])
+                cx = bx
+            else:
+                for (pos, _s) in ring_hops(cy, by, ny):
+                    links.append(link_id[("y", cx, pos)])
+                cy = by
+        return links
+
+    paths = {}
+    for a in range(k):
+        for b in range(a + 1, k):
+            ax, ay, bx, by = a // ny, a % ny, b // ny, b % ny
+            ps = [route(ax, ay, bx, by, "xy")]
+            if multipath:
+                alt = route(ax, ay, bx, by, "yx")
+                if alt != ps[0]:
+                    ps.append(alt)
+            paths[(a, b)] = ps
+    return routing_from_paths(k, len(link_id), paths,
+                              F_l=np.full(len(link_id), F, dtype=np.float32))
+
+
+def fat_tree_topology(k: int, arity: int = 4, F: float = 1.0,
+                      uplink_speedup: float = 2.0) -> TreeTopology:
+    """Fat tree as an F_l-weighted TreeTopology: links nearer the root have
+    ``uplink_speedup``x the capacity per level (lower cost factor)."""
+    levels = []
+    n = k
+    while n > 1:
+        n = int(np.ceil(n / arity))
+        levels.append(n)
+    branching = []
+    prev = 1
+    for n in reversed(levels):
+        branching.append(int(np.ceil(n / prev)) if prev else n)
+        prev = n
+    # simpler: balanced tree with ceil(log_arity k) levels of `arity`
+    depth = max(int(np.ceil(np.log(k) / np.log(arity))), 1)
+    branching = [arity] * depth
+    cost = [F / (uplink_speedup ** (depth - 1 - i)) for i in range(depth)]
+    topo = balanced_tree(branching, F=F, level_cost=cost)
+    return topo

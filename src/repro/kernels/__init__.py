@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Layout (per the repo convention): one ``<name>.py`` per kernel holding the
+``pl.pallas_call`` + BlockSpec tiling, ``ops.py`` with the jit'd public
+wrappers (and pure-XLA fallbacks), ``ref.py`` with pure-jnp oracles that the
+tests sweep shapes/dtypes against in ``interpret=True`` mode.
+
+Kernels:
+  * ``quotient_link_loads`` — the paper's objective: arc list -> per-link
+    communication cost, fused one-hot-MXU quotient accumulation + tree
+    epilogue.
+  * ``partition_gain`` — refinement connectivity rows (ELL one-hot SpMM).
+  * ``bsr_spmm`` — block-sparse message passing (scalar-prefetched BSR);
+    the op whose locality the partitioner's reordering improves.
+  * ``bag_combine`` — embedding-bag weighted reduction (recsys lookup).
+"""
+from repro.kernels import ops, ref  # noqa: F401
+# flash_attention (kernels/flash_attention.py): fused online-softmax
+# attention forward — VMEM score tiles, GQA via BlockSpec index maps; the
+# LM hot spot whose HBM traffic the roofline memory term models.

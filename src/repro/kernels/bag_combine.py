@@ -1,0 +1,51 @@
+"""Embedding-bag combine kernel (recsys lookup reduction).
+
+JAX has no native EmbeddingBag; ours is gather (XLA's native hardware path)
+followed by this kernel: the weighted per-bag reduction
+
+    out[b, f] = sum_d w[b, d] * gathered[b, d, f]
+
+over fixed-width bags (ELL layout, ``w = 0`` on padding slots). Tiled over
+(bag tile, feature tile); the inner contraction is a batched vec-mat on the
+MXU. Mean-combine is expressed by the caller via ``w = 1 / bag_len``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(g_ref, w_ref, out_ref):
+    g = g_ref[...]                     # [Bt, D, Ft]
+    w = w_ref[...]                     # [Bt, D]
+    out_ref[...] = jax.lax.dot_general(
+        w[:, None, :], g, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=out_ref.dtype)[:, 0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bag_blk", "feat_blk",
+                                              "interpret"))
+def bag_combine(gathered: jnp.ndarray, weights: jnp.ndarray, *,
+                bag_blk: int = 256, feat_blk: int = 128,
+                interpret: bool = False) -> jnp.ndarray:
+    """[B, D, F] x [B, D] -> [B, F] weighted bag reduction."""
+    b, d, f = gathered.shape
+    b_pad = ((b + bag_blk - 1) // bag_blk) * bag_blk
+    f_pad = ((f + feat_blk - 1) // feat_blk) * feat_blk
+    g = jnp.pad(gathered, ((0, b_pad - b), (0, 0), (0, f_pad - f)))
+    w = jnp.pad(weights, ((0, b_pad - b), (0, 0)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(b_pad // bag_blk, f_pad // feat_blk),
+        in_specs=[
+            pl.BlockSpec((bag_blk, d, feat_blk), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bag_blk, d), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bag_blk, feat_blk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, f_pad), gathered.dtype),
+        interpret=interpret,
+    )(g, w)
+    return out[:b, :f]

@@ -1,0 +1,114 @@
+"""Fused flash-attention forward kernel (Pallas TPU).
+
+This is the kernel the roofline's memory term models for LM cells: Q/K/V
+stream HBM->VMEM once per (head, q-block), the S x S score tiles live and
+die in VMEM scratch, O streams back. Online softmax state (acc, m, l) is
+carried across the kv-block grid dimension in VMEM scratch — the TPU grid
+is sequential, so the innermost dimension revisits the same scratch.
+
+GQA: query heads are grouped onto KV heads via the BlockSpec index map
+(``h // group``) — no repeated K/V materialization.
+
+Layout: q [BH, Sq, D], k/v [BKH, Sk, D] (batch*heads flattened; wrapper
+handles the [B, S, H, D] convention). Backward uses the pure-JAX custom
+VJP in ``models.common`` (FlashAttention-2-style recompute); a fused bwd
+kernel is a listed follow-up in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *, scale: float,
+            causal: bool, bq: int, bk: int, sk: int):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, -jnp.inf)
+        l[...] = jnp.zeros_like(l)
+
+    q = q_ref[0]                                   # [bq, D]
+    k = k_ref[0]                                   # [bk, D]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < sk
+    if causal:
+        i = pl.program_id(1)
+        q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        mask &= k_pos <= q_pos
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m[...][:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(jnp.isfinite(m_new)[:, None], p, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    l[...] = (l[...][:, 0] * alpha + p.sum(axis=1))[:, None]
+    m[...] = m_new[:, None]
+    acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        o_ref[0] = (acc[...] / jnp.maximum(l[...], 1e-20)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, block_q: int = 128,
+                        block_k: int = 128,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q [B, Sq, H, D]; k/v [B, Sk, KH, D] -> [B, Sq, H, D]."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / np.sqrt(d)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    nq = (sq + bq - 1) // bq
+    nk = (sk + bk - 1) // bk
+    sq_p, sk_p = nq * bq, nk * bk
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * kh, sk, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * kh, sk, d)
+    qf = jnp.pad(qf, ((0, 0), (0, sq_p - sq), (0, 0)))
+    kf = jnp.pad(kf, ((0, 0), (0, sk_p - sk), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, sk_p - sk), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq,
+                          bk=bk, sk=sk),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda bh, i, j, g=g: (bh // g, j, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda bh, i, j, g=g: (bh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    # BlockSpec index maps must not close over traced values; g is static.
+    return jnp.moveaxis(out[:, :sq].reshape(b, h, sq, d), 1, 2)

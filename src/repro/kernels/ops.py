@@ -1,0 +1,168 @@
+"""Public kernel API with backend dispatch.
+
+Every op has two interchangeable implementations:
+
+  * the Pallas TPU kernel (``<name>.py``) — explicit BlockSpec VMEM tiling,
+    validated in ``interpret=True`` on CPU (tests sweep shapes/dtypes against
+    ``ref.py``);
+  * a pure-XLA path (segment_sum / einsum) used when no TPU is present, so
+    the whole framework runs anywhere.
+
+``use_pallas()`` picks per-backend; callers can force either path (tests do).
+ELL/BSR layouts are built once on the host (graph structure is static); only
+values that change per step (partition labels, features) flow through jit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bag_combine as _bag
+from repro.kernels import bsr_spmm as _bsr
+from repro.kernels import partition_gain as _pg
+from repro.kernels import quotient_link_loads as _qll
+
+
+def use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# partition_gain: conn[v, j] = sum_{u in N(v), P(u)=j} w_vu
+# ---------------------------------------------------------------------------
+
+def partition_gain(part: jnp.ndarray, senders: jnp.ndarray,
+                   receivers: jnp.ndarray, edge_weight: jnp.ndarray,
+                   k: int) -> jnp.ndarray:
+    """Arc-list path (XLA segment_sum): used inside the refinement scan."""
+    n = part.shape[0]
+    key = senders.astype(jnp.int32) * k + part[receivers].astype(jnp.int32)
+    flat = jax.ops.segment_sum(edge_weight, key, num_segments=n * k)
+    return flat.reshape(n, k)
+
+
+def partition_gain_pallas(part: jnp.ndarray, nbr_idx: jnp.ndarray,
+                          nbr_w: jnp.ndarray, k: int,
+                          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """ELL kernel path. ``nbr_idx`` [n, D] neighbor ids (n = padding slot —
+    callers pad ``part`` with one extra sentinel mapped to bin k)."""
+    if interpret is None:
+        interpret = not use_pallas()
+    part_pad = jnp.concatenate([part.astype(jnp.int32),
+                                jnp.full((1,), k, jnp.int32)])
+    nbr_bin = part_pad[nbr_idx]
+    return _pg.partition_gain_ell(nbr_bin, nbr_w, k=k, interpret=interpret)
+
+
+def to_ell(n_nodes: int, senders: np.ndarray, receivers: np.ndarray,
+           edge_weight: np.ndarray, max_degree: Optional[int] = None
+           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host ELL conversion. Returns (nbr_idx [n, D], nbr_w [n, D]);
+    padding slots point at the sentinel row ``n_nodes`` with weight 0.
+    ``max_degree`` caps D (overflow arcs dropped — callers that need
+    exactness pass None)."""
+    deg = np.zeros(n_nodes, dtype=np.int64)
+    np.add.at(deg, senders, 1)
+    d = int(deg.max()) if deg.size else 0
+    if max_degree is not None:
+        d = min(d, max_degree)
+    d = max(d, 1)
+    nbr_idx = np.full((n_nodes, d), n_nodes, dtype=np.int32)
+    nbr_w = np.zeros((n_nodes, d), dtype=np.float32)
+    slot = np.zeros(n_nodes, dtype=np.int64)
+    order = np.argsort(senders, kind="stable")
+    for a in order:
+        s = senders[a]
+        if slot[s] < d:
+            nbr_idx[s, slot[s]] = receivers[a]
+            nbr_w[s, slot[s]] = edge_weight[a]
+            slot[s] += 1
+    return nbr_idx, nbr_w
+
+
+# ---------------------------------------------------------------------------
+# link_loads: F_l * comm(l) from arc bins
+# ---------------------------------------------------------------------------
+
+def link_loads(part: jnp.ndarray, senders: jnp.ndarray, receivers: jnp.ndarray,
+               edge_weight: jnp.ndarray, subtree: jnp.ndarray,
+               F_l: jnp.ndarray, k: int,
+               pallas: Optional[bool] = None,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    if pallas is None:
+        pallas = use_pallas()
+    bi = part[senders].astype(jnp.int32)
+    bj = part[receivers].astype(jnp.int32)
+    if pallas or interpret:
+        if interpret is None:
+            interpret = not use_pallas()
+        return _qll.quotient_link_loads(bi, bj, edge_weight, subtree, F_l,
+                                        k=k, interpret=interpret)
+    flat = jax.ops.segment_sum(edge_weight, bi * k + bj, num_segments=k * k)
+    W = flat.reshape(k, k)
+    S = subtree
+    cross = jnp.einsum("li,ij,lj->l", S, W, S)
+    return F_l * 0.5 * (S @ W.sum(1) + S @ W.sum(0) - 2.0 * cross)
+
+
+# ---------------------------------------------------------------------------
+# gnn_aggregate: out[v] = sum_{u in N(v)} w_vu * x[u]
+# ---------------------------------------------------------------------------
+
+def gnn_aggregate(senders: jnp.ndarray, receivers: jnp.ndarray,
+                  edge_weight: jnp.ndarray, x: jnp.ndarray,
+                  n_nodes: int) -> jnp.ndarray:
+    """XLA path: gather + segment_sum. Differentiable; used in train steps."""
+    msg = x[receivers] * edge_weight[:, None].astype(x.dtype)
+    return jax.ops.segment_sum(msg, senders, num_segments=n_nodes)
+
+
+def gnn_aggregate_bsr(bsr, x: jnp.ndarray,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """BSR kernel path. ``bsr`` is the tuple from :func:`prepare_bsr`."""
+    if interpret is None:
+        interpret = not use_pallas()
+    block_rows, block_cols, blocks, n_block_rows, n_nodes = bsr
+    r = blocks.shape[1]
+    f = x.shape[1]
+    feat_blk = min(128, f) if f % 128 else 128
+    if f % feat_blk:
+        feat_blk = f  # single tile fallback for odd widths
+    x_pad = jnp.pad(x, ((0, n_block_rows * r - x.shape[0]), (0, 0)))
+    out = _bsr.bsr_spmm(block_rows, block_cols, blocks, x_pad,
+                        n_block_rows=n_block_rows, feat_blk=feat_blk,
+                        interpret=interpret)
+    return out[:n_nodes]
+
+
+def prepare_bsr(n_nodes: int, senders: np.ndarray, receivers: np.ndarray,
+                edge_weight: np.ndarray, block: int = 128):
+    rows, cols, blocks, nb = _bsr.to_bsr(n_nodes, np.asarray(senders),
+                                         np.asarray(receivers),
+                                         np.asarray(edge_weight), block)
+    return (jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(blocks), nb,
+            n_nodes)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag: out[b] = sum_d w[b, d] * table[idx[b, d]]
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: jnp.ndarray, idx: jnp.ndarray, weights: jnp.ndarray,
+                  pallas: Optional[bool] = None,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """[V, F] table, [B, D] indices (pad slots point anywhere with w = 0),
+    [B, D] per-slot weights -> [B, F]."""
+    gathered = table[idx]                  # [B, D, F] — XLA hardware gather
+    if pallas is None:
+        pallas = use_pallas()
+    if pallas or interpret:
+        if interpret is None:
+            interpret = not use_pallas()
+        return _bag.bag_combine(gathered, weights.astype(gathered.dtype),
+                                interpret=interpret)
+    return jnp.einsum("bdf,bd->bf", gathered, weights.astype(gathered.dtype))

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def partition_gain_ref(part: jnp.ndarray, nbr_idx: jnp.ndarray,
+                       nbr_w: jnp.ndarray, k: int) -> jnp.ndarray:
+    """conn[v, j] from ELL: one-hot einsum, no tiling."""
+    part_pad = jnp.concatenate([part.astype(jnp.int32),
+                                jnp.full((1,), k, jnp.int32)])
+    bins = part_pad[nbr_idx]                           # [n, D]
+    onehot = jax.nn.one_hot(bins, k + 1, dtype=jnp.float32)[..., :k]
+    return jnp.einsum("nd,ndk->nk", nbr_w.astype(jnp.float32), onehot)
+
+
+def quotient_link_loads_ref(bin_i: jnp.ndarray, bin_j: jnp.ndarray,
+                            weight: jnp.ndarray, subtree: jnp.ndarray,
+                            F_l: jnp.ndarray, k: int) -> jnp.ndarray:
+    oi = jax.nn.one_hot(bin_i, k, dtype=jnp.float32)
+    oj = jax.nn.one_hot(bin_j, k, dtype=jnp.float32)
+    W = oi.T @ (weight[:, None].astype(jnp.float32) * oj)
+    S = subtree.astype(jnp.float32)
+    cross = jnp.einsum("li,ij,lj->l", S, W, S)
+    return F_l * 0.5 * (S @ W.sum(1) + S @ W.sum(0) - 2.0 * cross)
+
+
+def bsr_spmm_ref(block_rows: jnp.ndarray, block_cols: jnp.ndarray,
+                 blocks: jnp.ndarray, x: jnp.ndarray,
+                 n_block_rows: int) -> jnp.ndarray:
+    """Scatter every dense block into the full matrix, then one matmul."""
+    r = blocks.shape[1]
+    n_block_cols = x.shape[0] // r
+    a = jnp.zeros((n_block_rows * r, n_block_cols * r), dtype=blocks.dtype)
+
+    def body(i, a):
+        br, bc = block_rows[i], block_cols[i]
+        return jax.lax.dynamic_update_slice(
+            a, jax.lax.dynamic_slice(a, (br * r, bc * r), (r, r)) + blocks[i],
+            (br * r, bc * r))
+
+    a = jax.lax.fori_loop(0, blocks.shape[0], body, a)
+    return a @ x
+
+
+def bag_combine_ref(gathered: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bdf,bd->bf", gathered, weights.astype(gathered.dtype))
+
+
+def embedding_bag_ref(table: jnp.ndarray, idx: jnp.ndarray,
+                      weights: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bdf,bd->bf", table[idx],
+                      weights.astype(table.dtype))

@@ -1,0 +1,438 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder host devices, and extract the three roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Methodology (EXPERIMENTS.md §Roofline records the same):
+  * collective bytes — parsed from the compiled SPMD module text; each
+    collective contributes a ring-model per-device *link-byte* estimate
+    (all-gather F(S-1)/S, all-reduce 2F(S-1)/S, reduce-scatter F(S-1)/S,
+    all-to-all F(S-1)/S, permute F), scaled by the enclosing while-loops'
+    ``known_trip_count``. Raw operand sums are reported alongside.
+  * FLOPs / bytes — XLA's cost_analysis counts while bodies ONCE, so the
+    per-device totals come from ``repro.launch.hlo_cost``: a text-level
+    HLO cost model that multiplies every computation by its actual
+    execution count (while ``known_trip_count`` compounded through the
+    call graph). Validated against cost_analysis on loop-free modules.
+
+The XLA_FLAGS line below MUST run before any jax import (device count is
+locked at first init) — and only here, never globally.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+
+import argparse            # noqa: E402
+import json                # noqa: E402
+import re                  # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+from typing import Any, Dict, List, Optional, Tuple  # noqa: E402
+
+import jax                 # noqa: E402
+import numpy as np         # noqa: E402
+
+from repro import configs                  # noqa: E402
+from repro.dist.sharding import tree_shardings  # noqa: E402
+from repro.launch import hlo_cost          # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch.steps import build_cell, rules_for  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_RESULT_RE = re.compile(
+    r"=\s*(.*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_WHILE_RE = re.compile(r"condition=%([\w.\-]+), body=%([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, num_partitions: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return num_partitions
+
+
+def _link_bytes(op: str, result_bytes: int, s: int) -> Tuple[float, float]:
+    """(per-device ring link bytes, operand bytes) per the docstring."""
+    f = float(result_bytes)
+    if op == "all-gather":
+        return f * (s - 1) / s, f / s
+    if op == "all-reduce":
+        return 2.0 * f * (s - 1) / s, f
+    if op == "reduce-scatter":
+        full = f * s
+        return full * (s - 1) / s, full
+    if op == "all-to-all":
+        return f * (s - 1) / s, f
+    return f, f                                   # collective-permute
+
+
+def parse_collectives(hlo: str, num_partitions: int,
+                      fallback_trips: List[int]) -> Dict[str, Any]:
+    """Trip-scaled per-device collective byte totals by op type.
+
+    ``link_bf16`` additionally halves f32 collectives: XLA:CPU upcasts
+    every bf16 GEMM operand chain to f32 and hoists all-gathers past the
+    converts, so f32 collectives in this HLO are 2x the traffic the TPU
+    target moves. Genuinely-f32 tensors (optimizer second moments, softmax
+    statistics) are a small minority of collective payloads (methodology
+    note in EXPERIMENTS.md §Roofline).
+    """
+    comps: Dict[str, Dict] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        m = _HEADER_RE.match(s)
+        if m and s.endswith("{"):
+            cur = m.group(2)
+            comps[cur] = {"coll": [], "whiles": []}
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        rm = _RESULT_RE.search(s)
+        if rm:
+            op = rm.group(2)
+            result = rm.group(1)
+            rb = _shape_bytes(result)
+            rb32 = sum(
+                (int(np.prod([int(d) for d in dims.split(",")] or [1]))
+                 if dims else 1) * 4
+                for dt, dims in _SHAPE_RE.findall(result) if dt == "f32")
+            gs = _group_size(s, num_partitions)
+            link, operand = _link_bytes(op, rb, gs)
+            link32, _ = _link_bytes(op, rb32, gs)
+            comps[cur]["coll"].append((op, link, operand, link32))
+        wm = _WHILE_RE.search(s)
+        if wm:
+            tm = _TRIP_RE.search(s)
+            trip = int(tm.group(1)) if tm else 0
+            comps[cur]["whiles"].append((wm.group(2), trip))
+
+    if entry is None:
+        return {"link": {}, "operand": {}, "link_bf16": {}, "count": 0}
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float, depth: int = 0):
+        if depth > 10 or name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for body, trip in comps[name]["whiles"]:
+            if trip <= 0:
+                trip = max(fallback_trips) if fallback_trips else 1
+            visit(body, m * trip, depth + 1)
+
+    visit(entry, 1.0)
+    link: Dict[str, float] = {}
+    operand: Dict[str, float] = {}
+    link_bf16: Dict[str, float] = {}
+    count = 0
+    for name, m in mult.items():
+        for op, lb, ob, lb32 in comps[name]["coll"]:
+            link[op] = link.get(op, 0.0) + m * lb
+            operand[op] = operand.get(op, 0.0) + m * ob
+            link_bf16[op] = link_bf16.get(op, 0.0) + m * (lb - 0.5 * lb32)
+            count += 1
+    return {"link": link, "operand": operand, "link_bf16": link_bf16,
+            "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Compile helper + calibration
+# ---------------------------------------------------------------------------
+
+def _compile(arch, shape, mesh, overrides=None, grad_compress=False,
+             profile="2d"):
+    from repro.dist.sharding import sanitize_tree
+    rules = rules_for(arch.family, mesh.axis_names, profile=profile)
+    cell = build_cell(arch, shape, rules, grad_compress=grad_compress,
+                      overrides=overrides)
+    specs = tuple(sanitize_tree(sds, spec, mesh) for sds, spec in
+                  zip(cell["args_sds"], cell["args_specs"]))
+    shardings = tuple(tree_shardings(mesh, spec) for spec in specs)
+    with mesh:
+        jitted = jax.jit(cell["step"], in_shardings=shardings)
+        lowered = jitted.lower(*cell["args_sds"])
+        compiled = lowered.compile()
+    return cell, compiled
+
+
+def _cost(compiled) -> Tuple[float, float]:
+    c = compiled.cost_analysis() or {}
+    return float(c.get("flops", 0.0)), float(c.get("bytes accessed", 0.0))
+
+
+_FLASH_SCOPE = r"flash|_flash"
+
+
+def attention_kernel_bytes(arch, shape) -> float:
+    """Whole-network per-step HBM bytes of attention if executed as the
+    fused Pallas flash kernel (kernels/flash_attention.py): Q/K/V read +
+    O write (+dO/dQ/dK/dV in the backward), score tiles stay in VMEM.
+    Replaces the XLA-level attention traffic in the roofline memory term.
+    """
+    if arch.family != "lm" or shape.kind not in ("train", "prefill"):
+        return 0.0
+    cfg = arch.make_config(shape.name)
+    b, s = shape.meta["batch"], shape.meta["seq"]
+    bpe = 2  # bf16
+    if cfg.mla:
+        dqk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        q = b * s * cfg.n_heads * dqk
+        k = b * s * cfg.n_heads * dqk
+        v = b * s * cfg.n_heads * cfg.v_head_dim
+        o = v
+    else:
+        dh = cfg.head_dim
+        q = b * s * cfg.n_heads * dh
+        k = b * s * cfg.n_kv_heads * dh
+        v = k
+        o = q
+    fwd = (q + k + v + o) * bpe
+    factor = 3.0 if shape.kind == "train" else 1.0   # bwd rereads + writes
+    return cfg.n_layers * fwd * factor
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = None, grad_compress: bool = False,
+             tag: str = "", profile: str = "2d",
+             overrides: Optional[Dict] = None) -> Dict:
+    arch = configs.get(arch_name)
+    shape = arch.shapes[shape_name]
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    result: Dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_tag,
+                    "kind": shape.kind, "tag": tag}
+    if shape.kind == "skip":
+        result["status"] = "skip"
+        result["reason"] = shape.skip_reason
+        return _emit(result, out_dir)
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+
+    # production compile: collectives + memory + proof of compilability
+    prod_overrides = dict(overrides or {})
+    if arch.family == "lm" and shape.kind in ("train", "prefill"):
+        prod_overrides.setdefault("q_chunk", 0)  # single q block (see doc)
+    t0 = time.time()
+    cell, compiled = _compile(arch, shape, mesh, prod_overrides,
+                              grad_compress, profile=profile)
+    t_compile = time.time() - t0
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, chips, cell["scan_lengths"])
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        }
+    except Exception:                                    # pragma: no cover
+        mem_info = {}
+    agg_flops, agg_bytes = _cost(compiled)
+    del compiled
+
+    # loop-aware totals from the text cost model
+    t0 = time.time()
+    comps, entry = hlo_cost.parse(hlo)
+    mult = (hlo_cost.multipliers(comps, entry) if entry else {})
+    cal = {k: 0.0 for k in ("flops", "bytes", "bytes_fused", "bytes_tight",
+                            "bytes_tight_f32", "transcendentals")}
+    bytes_deep = 0.0     # tight-HBM bytes strictly inside nested whiles
+    deep_threshold = (max(cell["scan_lengths"]) if cell["scan_lengths"]
+                      else 1)
+    for name, m in mult.items():
+        c = comps[name]
+        cal["flops"] += m * c.flops
+        cal["bytes"] += m * c.bytes
+        cal["bytes_fused"] += m * c.bytes_fused
+        cal["bytes_tight"] += m * (c.bytes_tight - 0.5 * c.bytes_tight_f32)
+        cal["bytes_tight_f32"] += m * c.bytes_tight_f32
+        cal["transcendentals"] += m * c.transcendentals
+        if m > deep_threshold:
+            bytes_deep += m * (c.bytes_tight - 0.5 * c.bytes_tight_f32)
+    t_cal = time.time() - t0
+    jax.clear_caches()
+
+    flops_dev = max(cal["flops"], agg_flops)
+    # HBM proxy = tight op set (GEMM I/O, data movement, collectives; see
+    # hlo_cost._TIGHT_HBM), with f32 traffic halved (XLA:CPU upcasts the
+    # bf16 policy path; the TPU target moves bf16). For LM train/prefill,
+    # the flash-attention interior (everything nested deeper than the
+    # layer scan = the kv-chunk loops) is swapped for the fused Pallas
+    # kernel's Q/K/V/O traffic — score tiles live in VMEM on the target
+    # (kernels/flash_attention.py).
+    attn_dev = attention_kernel_bytes(arch, shape) / chips
+    if arch.family == "lm" and shape.kind in ("train", "prefill"):
+        bytes_dev = cal["bytes_tight"] - bytes_deep + attn_dev
+    else:
+        bytes_dev = cal["bytes_tight"]
+        bytes_deep = 0.0
+    bytes_all_dev = max(cal["bytes"], agg_bytes)
+    link_dev = float(sum(coll["link_bf16"].values()))
+    model_fl = arch.model_flops(shape.name)
+
+    compute_s = flops_dev / mesh_lib.PEAK_FLOPS
+    memory_s = bytes_dev / mesh_lib.HBM_BW
+    collective_s = link_dev / mesh_lib.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    result.update({
+        "status": "ok",
+        "chips": chips,
+        "compile_s": round(t_compile, 2), "calibrate_s": round(t_cal, 2),
+        "per_device": {"flops": flops_dev, "bytes": bytes_dev,
+                       "bytes_unfused": bytes_all_dev,
+                       "bytes_attn_xla": bytes_deep,
+                       "bytes_attn_kernel": attn_dev,
+                       "collective_link_bytes": coll["link_bf16"],
+                       "collective_link_bytes_raw_f32": coll["link"],
+                       "collective_operand_bytes": coll["operand"],
+                       "n_collectives": coll["count"]},
+        "total": {"flops": flops_dev * chips, "bytes": bytes_dev * chips,
+                  "collective_link_bytes": link_dev * chips},
+        "agg_once": {"flops": agg_flops, "bytes": agg_bytes},
+        "hlo_cost": cal,
+        "memory_analysis": mem_info,
+        "model_flops": model_fl,
+        "useful_ratio": (model_fl / (flops_dev * chips)
+                         if flops_dev else None),
+        "roofline_terms": terms,
+        "dominant": dominant,
+        "step_time_bound_s": bound,
+        "roofline_fraction": (compute_s / bound if bound > 0 else None),
+        "scan_lengths": cell["scan_lengths"],
+    })
+    return _emit(result, out_dir)
+
+
+def _emit(result: Dict, out_dir: Optional[str]) -> Dict:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"__{result['tag']}" if result.get("tag") else ""
+        name = (f"{result['arch']}__{result['shape']}"
+                f"__{result['mesh']}{tag}.json")
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--profile", default="2d",
+                    help="lm sharding profile: 2d | fsdp | sp")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (int), e.g. ep_shard_map=1")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=")
+        overrides[k] = int(v)
+
+    meshes = []
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    if args.multi_pod or args.all:
+        meshes.append(True)
+    if args.all:
+        meshes = [False, True]
+
+    cells: List[Tuple[str, str]] = []
+    if args.all:
+        for arch, shape in configs.all_cells():
+            cells.append((arch.name, shape.name))
+    else:
+        arch = configs.get(args.arch)
+        shapes = [args.shape] if args.shape else list(arch.shapes)
+        cells = [(args.arch, s) for s in shapes]
+
+    failures = 0
+    for arch_name, shape_name in cells:
+        for mp in meshes:
+            mesh_tag = "2x16x16" if mp else "16x16"
+            try:
+                r = run_cell(arch_name, shape_name, mp, args.out,
+                             grad_compress=args.grad_compress, tag=args.tag,
+                             profile=args.profile, overrides=overrides)
+                if r["status"] == "skip":
+                    print(f"[SKIP] {arch_name}/{shape_name}/{mesh_tag}: "
+                          f"{r['reason'][:60]}", flush=True)
+                else:
+                    t = r["roofline_terms"]
+                    print(f"[OK]   {arch_name}/{shape_name}/{mesh_tag} "
+                          f"compile={r['compile_s']}s "
+                          f"comp={t['compute_s']:.3e} "
+                          f"mem={t['memory_s']:.3e} "
+                          f"coll={t['collective_s']:.3e} "
+                          f"dom={r['dominant']} "
+                          f"roofline={r['roofline_fraction']:.2f}",
+                          flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {arch_name}/{shape_name}/{mesh_tag}: {e}",
+                      flush=True)
+                traceback.print_exc()
+            finally:
+                jax.clear_caches()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

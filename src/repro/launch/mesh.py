@@ -1,0 +1,31 @@
+"""Production mesh construction (DESIGN.md §6).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state. The dry-run sets XLA_FLAGS for 512 host devices
+BEFORE importing jax; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """Whatever devices exist, as a 1D 'data' mesh (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+# Hardware constants (TPU v5e-class; fixed by the assignment)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

@@ -1,0 +1,73 @@
+"""Serving driver: batched decode with a KV cache (LM) or batched scoring
+(recsys).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --batch 4 --prompt-len 16 --gen-len 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.steps import rules_for
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    arch = configs.get(args.arch)
+    if arch.family != "lm":
+        raise SystemExit("serve.py drives LM decode; use examples/"
+                         "retrieval_serving.py for recsys")
+    cfg = arch.smoke_config() if args.smoke else arch.make_config(
+        "decode_32k")
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    rules = rules_for("lm", mesh.axis_names)
+    from repro.models import transformer as tr
+
+    params, _ = tr.init(jax.random.PRNGKey(0), cfg, rules)
+    max_seq = args.prompt_len + args.gen_len
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                              cfg.vocab)
+
+    decode = jax.jit(lambda p, c, t, pos: tr.decode_step(p, c, t, pos, cfg,
+                                                         rules))
+    with mesh:
+        cache, _ = tr.init_cache(cfg, args.batch, max_seq, rules)
+        # prefill by stepping the decode cache (simple, exact)
+        t0 = time.time()
+        out = []
+        tok = toks[:, :1]
+        for pos in range(max_seq - 1):
+            logits, cache = decode(params, cache, tok, jnp.int32(pos))
+            if pos + 1 < args.prompt_len:
+                tok = toks[:, pos + 1: pos + 2]
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits / args.temperature, axis=-1)
+                tok = nxt[:, None]
+                out.append(np.asarray(tok))
+        dt = time.time() - t0
+    gen = np.concatenate(out, axis=1)
+    tput = args.batch * gen.shape[1] / dt
+    print(f"generated {gen.shape} tokens in {dt:.2f}s "
+          f"({tput:.1f} tok/s); sample row: {gen[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

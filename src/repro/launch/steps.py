@@ -1,0 +1,197 @@
+"""Family-specific step builders shared by the dry-run, the trainers and
+the serving driver: given (arch, shape, rules) produce the step callable,
+its input ShapeDtypeStructs and the logical shardings of every argument.
+
+This module must stay import-safe before jax device initialization (the
+dry-run imports it after setting XLA_FLAGS).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common as cc
+from repro.dist.sharding import Rules, gnn_rules, lm_rules, recsys_rules
+from repro.optim import adamw
+from repro.train.steps import make_train_step
+
+
+def rules_for(family: str, mesh_axes, profile: str = "2d") -> Rules:
+    if family == "lm":
+        return lm_rules(mesh_axes, profile=profile)
+    if family == "gnn":
+        return gnn_rules(mesh_axes)
+    if family == "recsys":
+        return recsys_rules(mesh_axes)
+    raise ValueError(family)
+
+
+def eval_shape_with_specs(init_fn, *args):
+    """eval_shape an init that returns (params, spec_tree): SDS params +
+    the (static) spec tree captured on the side."""
+    captured = {}
+
+    def wrapper(*a):
+        p, s = init_fn(*a)
+        captured["spec"] = s
+        return p
+
+    sds = jax.eval_shape(wrapper, *args)
+    return sds, captured["spec"]
+
+
+def opt_config(total_steps: int = 1000) -> adamw.AdamWConfig:
+    return adamw.AdamWConfig(total_steps=total_steps)
+
+
+# ---------------------------------------------------------------------------
+# Per-(family, kind) builders
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: cc.ArchDef, shape: cc.ShapeSpec, rules: Rules,
+               grad_compress: bool = False,
+               overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Returns dict with:
+        step: callable
+        args_sds: tuple of SDS pytrees (positional args of step)
+        args_specs: tuple of PartitionSpec pytrees (same structure)
+        donate: tuple of donated arg indices
+        scan_lengths: list of scan trip counts (for HLO collective scaling)
+
+    ``overrides`` (dry-run calibration): n_layers / q_chunk / kv_chunk /
+    edge_chunk override the model config; ``arcs`` overrides the shape meta.
+    """
+    if shape.kind == "skip":
+        raise ValueError(f"{arch.name}/{shape.name} is skipped: "
+                         f"{shape.skip_reason}")
+    import dataclasses as _dc
+    overrides = dict(overrides or {})
+    arcs_override = overrides.pop("arcs", None)
+    cfg = arch.make_config(shape.name)
+    cfg_over = {k: v for k, v in overrides.items()
+                if hasattr(cfg, k)}
+    if cfg_over:
+        cfg = _dc.replace(cfg, **cfg_over)
+    shape = cc.ShapeSpec(shape.name, shape.kind,
+                         {**shape.meta, **({"arcs": arcs_override}
+                                           if arcs_override else {})},
+                         shape.skip_reason)
+    key = jax.random.PRNGKey(0)
+
+    if arch.family == "lm":
+        from repro.models import transformer as tr
+        params_sds, pspec = eval_shape_with_specs(
+            lambda k: tr.init(k, cfg, rules), key)
+        if shape.kind == "train":
+            ocfg = opt_config()
+            opt_sds = jax.eval_shape(
+                functools.partial(adamw.init, cfg=ocfg), params_sds)
+            ospec = adamw.state_specs(pspec)
+            loss = functools.partial(tr.loss_fn, cfg=cfg, rules=rules)
+            step = make_train_step(lambda p, b: loss(p, b), ocfg,
+                                   grad_compress=grad_compress,
+                                   grad_specs=pspec)
+            b_sds, b_logical = cc.lm_train_inputs(**shape.meta)
+            b_spec = cc.logical_to_specs(b_logical, rules)
+            scan_lengths = [cfg.n_layers]
+            return dict(step=step, args_sds=(params_sds, opt_sds, b_sds),
+                        args_specs=(pspec, ospec, b_spec), donate=(0, 1),
+                        scan_lengths=scan_lengths)
+        if shape.kind == "prefill":
+            step = functools.partial(tr.prefill, cfg=cfg, rules=rules)
+            b_sds, b_logical = cc.lm_prefill_inputs(**shape.meta)
+            return dict(step=lambda p, b: step(p, b["tokens"]),
+                        args_sds=(params_sds, b_sds),
+                        args_specs=(pspec, cc.logical_to_specs(b_logical,
+                                                               rules)),
+                        donate=(), scan_lengths=[cfg.n_layers])
+        if shape.kind == "decode":
+            b, s = shape.meta["batch"], shape.meta["seq"]
+            cache_sds, cache_spec = eval_shape_with_specs(
+                lambda: tr.init_cache(cfg, b, s, rules))
+
+            def step(params, cache, tokens, pos):
+                return tr.decode_step(params, cache, tokens, pos, cfg, rules)
+
+            tok_sds = cc.sds((b, 1), jnp.int32)
+            pos_sds = cc.sds((), jnp.int32)
+            return dict(step=step,
+                        args_sds=(params_sds, cache_sds, tok_sds, pos_sds),
+                        args_specs=(pspec, cache_spec,
+                                    rules.spec("batch", None), P()),
+                        donate=(1,), scan_lengths=[cfg.n_layers])
+
+    if arch.family == "gnn":
+        is_eq = arch.name == "equiformer-v2"
+        if is_eq:
+            from repro.models import equiformer as mdl
+        else:
+            from repro.models import gnn as mdl
+        params_sds, pspec = eval_shape_with_specs(
+            lambda k: mdl.init(k, cfg, rules), key)
+        ocfg = opt_config()
+        opt_sds = jax.eval_shape(functools.partial(adamw.init, cfg=ocfg),
+                                 params_sds)
+        ospec = adamw.state_specs(pspec)
+        loss = functools.partial(mdl.loss_fn, cfg=cfg, rules=rules)
+        step = make_train_step(lambda p, b: loss(p, b), ocfg,
+                               grad_compress=grad_compress,
+                               grad_specs=pspec)
+        meta = shape.meta
+        n_labels = meta["graphs"] if meta.get("graph_level") else meta["n"]
+        b_sds, b_logical = cc.gnn_train_inputs(
+            meta["n"], meta["arcs"], meta["d_feat"], n_labels,
+            with_pos=is_eq, graph_level=bool(meta.get("graph_level")))
+        chunk = getattr(cfg, "edge_chunk", 0)
+        scan_lengths = [cfg.n_layers]
+        if chunk:
+            scan_lengths.append((meta["arcs"] + chunk - 1) // chunk)
+        return dict(step=step, args_sds=(params_sds, opt_sds, b_sds),
+                    args_specs=(pspec, ospec,
+                                cc.logical_to_specs(b_logical, rules)),
+                    donate=(0, 1), scan_lengths=scan_lengths)
+
+    if arch.family == "recsys":
+        from repro.models import recsys as rs
+        params_sds, pspec = eval_shape_with_specs(
+            lambda k: rs.init(k, cfg, rules), key)
+        if shape.kind == "train":
+            ocfg = opt_config()
+            opt_sds = jax.eval_shape(functools.partial(adamw.init, cfg=ocfg),
+                                     params_sds)
+            ospec = adamw.state_specs(pspec)
+            loss = functools.partial(rs.loss_fn, cfg=cfg, rules=rules)
+            step = make_train_step(lambda p, b: loss(p, b), ocfg,
+                                   grad_compress=grad_compress,
+                                   grad_specs=pspec)
+            b_sds, b_logical = cc.recsys_train_inputs(
+                shape.meta["batch"], cfg.hist_len, cfg.d_dense)
+            return dict(step=step, args_sds=(params_sds, opt_sds, b_sds),
+                        args_specs=(pspec, ospec,
+                                    cc.logical_to_specs(b_logical, rules)),
+                        donate=(0, 1), scan_lengths=[])
+        if shape.kind == "score":
+            step = functools.partial(rs.score, cfg=cfg, rules=rules)
+            b_sds, b_logical = cc.recsys_train_inputs(
+                shape.meta["batch"], cfg.hist_len, cfg.d_dense)
+            return dict(step=lambda p, b: step(p, b),
+                        args_sds=(params_sds, b_sds),
+                        args_specs=(pspec, cc.logical_to_specs(b_logical,
+                                                               rules)),
+                        donate=(), scan_lengths=[])
+        if shape.kind == "retrieve":
+            step = functools.partial(rs.retrieve, cfg=cfg, rules=rules)
+            b_sds, b_logical = cc.recsys_retrieve_inputs(
+                cfg.hist_len, cfg.d_dense, shape.meta["n_cand"],
+                cfg.embed_dim)
+            return dict(step=lambda p, b: step(p, b),
+                        args_sds=(params_sds, b_sds),
+                        args_specs=(pspec, cc.logical_to_specs(b_logical,
+                                                               rules)),
+                        donate=(), scan_lengths=[])
+
+    raise ValueError(f"no builder for {arch.family}/{shape.kind}")

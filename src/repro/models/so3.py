@@ -1,0 +1,236 @@
+"""Real-spherical-harmonic rotation matrices (Wigner D) in JAX.
+
+EquiformerV2's eSCN trick needs, per edge, the block-diagonal rotation
+``D^l(R_e)`` (l = 0..l_max) for the rotation ``R_e`` that aligns the edge
+direction with +z — features are rotated into the edge frame, convolved with
+SO(2)-sparse weights, and rotated back.
+
+``D^l`` is built by the Ivanic–Ruedenberg recursion (J. Phys. Chem. 1996,
+with the 1998 erratum): ``R^l`` is assembled from ``R^{l-1}`` and ``R^1``
+with coefficients u, v, w that depend only on (l, m, n) — we precompute those
+tables (and all clamped gather indices) in numpy once per l, so the per-edge
+work is pure vectorized gathers + multiplies, vmappable over millions of
+edges and differentiable through the edge directions.
+
+Real-SH conventions: l=1 basis ordered (Y_1^{-1}, Y_1^0, Y_1^1) ~ (y, z, x);
+``R^1 = Pᵀ R P`` with P the (x,y,z)->(y,z,x) permutation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Coefficient tables (host / numpy, cached per l)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _uvw_tables(l: int):
+    """u, v, w coefficients and gather indices for the recursion at level l.
+
+    Returns dict of numpy arrays indexed [m+l, n+l] (shape [2l+1, 2l+1]).
+    Index arrays address P[i, mu, n] with mu clamped into [-(l-1), l-1]
+    (out-of-range entries always carry zero coefficient).
+    """
+    size = 2 * l + 1
+    u = np.zeros((size, size))
+    v = np.zeros((size, size))
+    w = np.zeros((size, size))
+    for m in range(-l, l + 1):
+        for n in range(-l, l + 1):
+            denom = (2 * l) * (2 * l - 1) if abs(n) == l else (l + n) * (l - n)
+            d_m0 = 1.0 if m == 0 else 0.0
+            u[m + l, n + l] = np.sqrt((l + m) * (l - m) / denom)
+            v[m + l, n + l] = 0.5 * np.sqrt(
+                (1 + d_m0) * (l + abs(m) - 1) * (l + abs(m)) / denom) \
+                * (1 - 2 * d_m0)
+            w[m + l, n + l] = -0.5 * np.sqrt(
+                (l - abs(m) - 1) * (l - abs(m)) / denom) * (1 - d_m0)
+
+    lm1 = l - 1
+    def clamp(mu):
+        return int(np.clip(mu, -lm1, lm1)) + lm1
+
+    # V-term: indices and signs depend on sign(m); W-term similar.
+    mu_u = np.zeros(size, dtype=np.int32)
+    mu_v_a = np.zeros(size, dtype=np.int32)   # P_{+1}(...) argument
+    mu_v_b = np.zeros(size, dtype=np.int32)   # P_{-1}(...) argument
+    c_v_a = np.zeros(size)
+    c_v_b = np.zeros(size)
+    mu_w_a = np.zeros(size, dtype=np.int32)
+    mu_w_b = np.zeros(size, dtype=np.int32)
+    c_w_a = np.zeros(size)
+    c_w_b = np.zeros(size)
+    for m in range(-l, l + 1):
+        i = m + l
+        mu_u[i] = clamp(m)
+        if m == 0:
+            mu_v_a[i], c_v_a[i] = clamp(1), 1.0
+            mu_v_b[i], c_v_b[i] = clamp(-1), 1.0
+            mu_w_a[i], c_w_a[i] = 0, 0.0
+            mu_w_b[i], c_w_b[i] = 0, 0.0
+        elif m > 0:
+            d_m1 = 1.0 if m == 1 else 0.0
+            mu_v_a[i], c_v_a[i] = clamp(m - 1), np.sqrt(1 + d_m1)
+            mu_v_b[i], c_v_b[i] = clamp(-m + 1), -(1 - d_m1)
+            mu_w_a[i], c_w_a[i] = clamp(m + 1), 1.0
+            mu_w_b[i], c_w_b[i] = clamp(-m - 1), 1.0
+        else:
+            d_m1 = 1.0 if m == -1 else 0.0
+            mu_v_a[i], c_v_a[i] = clamp(m + 1), (1 - d_m1)
+            mu_v_b[i], c_v_b[i] = clamp(-m - 1), np.sqrt(1 + d_m1)
+            mu_w_a[i], c_w_a[i] = clamp(m - 1), 1.0
+            mu_w_b[i], c_w_b[i] = clamp(-m + 1), -1.0
+    return dict(u=u, v=v, w=w, mu_u=mu_u, mu_v_a=mu_v_a, mu_v_b=mu_v_b,
+                c_v_a=c_v_a, c_v_b=c_v_b, mu_w_a=mu_w_a, mu_w_b=mu_w_b,
+                c_w_a=c_w_a, c_w_b=c_w_b)
+
+
+# ---------------------------------------------------------------------------
+# Recursion (JAX, batched over edges)
+# ---------------------------------------------------------------------------
+
+def _p_tensor(r1: jnp.ndarray, r_prev: jnp.ndarray, l: int) -> jnp.ndarray:
+    """P[i, mu, n] for i in {-1,0,1}, mu in [-(l-1), l-1], n in [-l, l].
+
+    r1: [..., 3, 3] (indices m=-1,0,1); r_prev: [..., 2l-1, 2l-1].
+    """
+    # columns of r1: j index 0,1,2 = m -1, 0, +1
+    mid = jnp.einsum("...i,...mn->...imn", r1[..., 1], r_prev)   # |n| < l
+    hi = (jnp.einsum("...i,...m->...im", r1[..., 2], r_prev[..., 2 * l - 2])
+          - jnp.einsum("...i,...m->...im", r1[..., 0], r_prev[..., 0]))
+    lo = (jnp.einsum("...i,...m->...im", r1[..., 2], r_prev[..., 0])
+          + jnp.einsum("...i,...m->...im", r1[..., 0],
+                       r_prev[..., 2 * l - 2]))
+    return jnp.concatenate([lo[..., None], mid, hi[..., None]], axis=-1)
+
+
+def _next_level(r1: jnp.ndarray, r_prev: jnp.ndarray, l: int) -> jnp.ndarray:
+    t = _uvw_tables(l)
+    P = _p_tensor(r1, r_prev, l)                       # [..., 3, 2l-1, 2l+1]
+    U = P[..., 1, t["mu_u"], :]                         # [..., 2l+1, 2l+1]
+    V = (jnp.asarray(t["c_v_a"])[:, None] * P[..., 2, t["mu_v_a"], :]
+         + jnp.asarray(t["c_v_b"])[:, None] * P[..., 0, t["mu_v_b"], :])
+    W = (jnp.asarray(t["c_w_a"])[:, None] * P[..., 2, t["mu_w_a"], :]
+         + jnp.asarray(t["c_w_b"])[:, None] * P[..., 0, t["mu_w_b"], :])
+    return (jnp.asarray(t["u"]) * U + jnp.asarray(t["v"]) * V
+            + jnp.asarray(t["w"]) * W)
+
+
+def wigner_d_stack(rot: jnp.ndarray, l_max: int) -> List[jnp.ndarray]:
+    """[D^0, D^1, ..., D^l_max] for rotation matrices ``rot`` [..., 3, 3].
+
+    D^l has shape [..., 2l+1, 2l+1] in the real-SH basis.
+    """
+    batch = rot.shape[:-2]
+    out: List[jnp.ndarray] = [jnp.ones(batch + (1, 1), rot.dtype)]
+    if l_max == 0:
+        return out
+    perm = jnp.asarray([1, 2, 0])                      # (x,y,z) -> (y,z,x)
+    r1 = rot[..., perm[:, None], perm[None, :]]
+    out.append(r1)
+    r_prev = r1
+    for l in range(2, l_max + 1):
+        r_prev = _next_level(r1, r_prev, l)
+        out.append(r_prev)
+    return out
+
+
+def block_diag_wigner(rot: jnp.ndarray, l_max: int) -> jnp.ndarray:
+    """Dense block-diagonal D over all l: [..., M, M], M = (l_max+1)^2."""
+    ds = wigner_d_stack(rot, l_max)
+    m = (l_max + 1) ** 2
+    batch = rot.shape[:-2]
+    out = jnp.zeros(batch + (m, m), rot.dtype)
+    off = 0
+    for l, d in enumerate(ds):
+        sz = 2 * l + 1
+        out = out.at[..., off:off + sz, off:off + sz].set(d)
+        off += sz
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Edge-alignment rotations
+# ---------------------------------------------------------------------------
+
+def edge_rotation(direction: jnp.ndarray, eps: float = 1e-7) -> jnp.ndarray:
+    """Rotation R with R @ d = +z (rows: new basis). [..., 3, 3].
+
+    Rodrigues about axis = d x z; for d ~ +-z we blend toward identity /
+    a 180-degree flip about x, keeping everything differentiable.
+    """
+    d = direction / jnp.maximum(
+        jnp.linalg.norm(direction, axis=-1, keepdims=True), eps)
+    z = jnp.asarray([0.0, 0.0, 1.0], d.dtype)
+    v = jnp.cross(d, jnp.broadcast_to(z, d.shape))      # axis * sin
+    c = d[..., 2]                                        # cos
+    s2 = jnp.sum(v * v, axis=-1)                         # sin^2
+    vx = jnp.zeros(d.shape[:-1] + (3, 3), d.dtype)
+    vx = vx.at[..., 0, 1].set(-v[..., 2]).at[..., 0, 2].set(v[..., 1])
+    vx = vx.at[..., 1, 0].set(v[..., 2]).at[..., 1, 2].set(-v[..., 0])
+    vx = vx.at[..., 2, 0].set(-v[..., 1]).at[..., 2, 1].set(v[..., 0])
+    eye = jnp.eye(3, dtype=d.dtype)
+    coef = jnp.where(s2 > eps, (1.0 - c) / jnp.maximum(s2, eps), 0.5)
+    r = eye + vx + coef[..., None, None] * (vx @ vx)
+    # antiparallel fallback: 180-degree rotation about x
+    flip = jnp.asarray([[1.0, 0, 0], [0, -1.0, 0], [0, 0, -1.0]], d.dtype)
+    anti = (c < -1.0 + 1e-5)[..., None, None]
+    return jnp.where(anti, flip, r)
+
+
+# ---------------------------------------------------------------------------
+# Real spherical harmonics (for tests: Y(R r) = D(R) Y(r))
+# ---------------------------------------------------------------------------
+
+def real_sph_harm(xyz: np.ndarray, l_max: int) -> np.ndarray:
+    """Real SH values [..., (l_max+1)^2] (numpy; test oracle only).
+
+    No Condon–Shortley phase — the Ivanic–Ruedenberg recursion targets this
+    convention (validated by tests/test_so3.py: Y(R r) = D(R) Y(r)).
+    """
+    from math import factorial
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    r = np.sqrt(x * x + y * y + z * z)
+    theta = np.arccos(np.clip(z / np.maximum(r, 1e-12), -1, 1))
+    phi = np.arctan2(y, x)
+    ct = np.cos(theta)
+    out = []
+    for l in range(l_max + 1):
+        # associated Legendre P_l^m(ct) via recursion
+        pmm = {}
+        for m in range(l + 1):
+            p = np.ones_like(ct)
+            somx2 = np.sqrt(np.maximum(1 - ct * ct, 0))
+            fact = 1.0
+            for _ in range(m):
+                p *= fact * somx2          # no (-1)^m CS phase
+                fact += 2.0
+            if l == m:
+                pmm[m] = p
+                continue
+            pmmp1 = ct * (2 * m + 1) * p
+            if l == m + 1:
+                pmm[m] = pmmp1
+                continue
+            pll = None
+            for ll in range(m + 2, l + 1):
+                pll = (ct * (2 * ll - 1) * pmmp1 - (ll + m - 1) * p) / (ll - m)
+                p, pmmp1 = pmmp1, pll
+            pmm[m] = pll
+        for m in range(-l, l + 1):
+            am = abs(m)
+            norm = np.sqrt((2 * l + 1) / (4 * np.pi)
+                           * factorial(l - am) / factorial(l + am))
+            if m == 0:
+                out.append(norm * pmm[0])
+            elif m > 0:
+                out.append(np.sqrt(2) * norm * pmm[am] * np.cos(am * phi))
+            else:
+                out.append(np.sqrt(2) * norm * pmm[am] * np.sin(am * phi))
+    return np.stack(out, axis=-1)

@@ -1,0 +1,65 @@
+"""Train/serve step factories — the functions the launcher jits and the
+dry-run lowers. One generic ``make_train_step`` serves every family (the
+loss_fn closure carries the model); serve steps are family-specific.
+
+``grad_compress=True`` routes gradients through the int8 error-feedback
+round trip (repro.dist.compress) before the optimizer — under pjit this is
+what shrinks the DP all-reduce payload.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw  # noqa: F401 (re-exported for callers)
+
+
+def _constrain(tree, specs):
+    """with_sharding_constraint where the spec has real axes (skip the
+    replicated/single-device case)."""
+    def one(x, spec):
+        if spec is None or all(a is None for a in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+    return jax.tree.map(one, tree, specs,
+                        is_leaf=lambda t: t is None)
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
+                    grad_compress: bool = False,
+                    grad_specs: Optional[Any] = None) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics dict).
+
+    Returns step(params, opt_state, batch) ->
+        (params, opt_state, metrics) — pure, jit/pjit-able, donate-friendly.
+
+    ``grad_specs`` (the param PartitionSpec tree) constrains gradients to
+    the parameter sharding BEFORE the optimizer: XLA then reduce-scatters
+    bf16 gradients instead of all-reducing them (2x fewer collective
+    bytes under FSDP — §Perf iteration C2).
+    """
+
+    def step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        if grad_specs is not None:
+            grads = _constrain(grads, grad_specs)
+        if grad_compress:
+            from repro.dist import compress
+            grads, _ = compress.roundtrip(grads)
+        params, opt_state, om = adamw.update(grads, opt_state, params,
+                                             opt_cfg)
+        metrics = {"loss": loss, **aux, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(loss_fn: Callable) -> Callable:
+    def step(params, batch):
+        loss, aux = loss_fn(params, batch)
+        return {"loss": loss, **aux}
+    return step

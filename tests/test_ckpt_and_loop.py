@@ -1,0 +1,173 @@
+"""Fault tolerance: atomic checkpointing, async saves, restart-resume with
+injected failure, pruning, elastic re-shard, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.dist import compress
+from repro.optim import adamw
+from repro.train import loop
+from repro.train.steps import make_train_step
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.float32),
+                       "s": jnp.int32(7)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t)
+    restored, step = ckpt.restore(str(tmp_path), t)
+    assert step == 3
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                         np.asarray(b)),
+                 t, restored)
+
+
+def test_latest_and_prune(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, t)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    ckpt.prune(str(tmp_path), keep=2)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+
+
+def test_incomplete_save_invisible(tmp_path):
+    """A crash mid-save (tmp dir left behind) must not corrupt latest."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    os.makedirs(tmp_path / ".tmp_2")           # simulated dead partial save
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    restored, step = ckpt.restore(str(tmp_path), t)
+    assert step == 1
+
+
+def test_async_saver(tmp_path):
+    saver = ckpt.AsyncSaver()
+    t = _tree()
+    saver.save(str(tmp_path), 5, t)
+    saver.join()
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    bad = {"w": jnp.zeros((9, 4)),
+           "nested": {"b": jnp.zeros(5), "s": jnp.int32(0)}}
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def _quadratic_setup():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(16,)),
+                         jnp.float32)
+
+    def loss_fn(params, batch):
+        err = params["x"] - target + 0.01 * batch["noise"]
+        return (err ** 2).sum(), {}
+
+    ocfg = adamw.AdamWConfig(lr=0.05, total_steps=60, warmup_steps=0,
+                             weight_decay=0.0)
+    step = jax.jit(make_train_step(loss_fn, ocfg))
+    params = {"x": jnp.zeros(16)}
+    opt = adamw.init(params, ocfg)
+
+    def batches():
+        rng = np.random.default_rng(1)
+        while True:
+            yield {"noise": jnp.asarray(rng.normal(size=(16,)), jnp.float32)}
+
+    return step, params, opt, batches
+
+
+def test_loop_failure_recovery(tmp_path):
+    """Kill training mid-run; restart resumes from the checkpoint and ends
+    at the same total step count with decreasing loss."""
+    step, params, opt, batches = _quadratic_setup()
+    cfg = loop.LoopConfig(total_steps=40, ckpt_every=10,
+                          ckpt_dir=str(tmp_path), fail_at_step=25,
+                          log_every=100)
+    gen = batches()
+    with pytest.raises(loop.InjectedFailure):
+        loop.run(step, params, opt, gen, cfg)
+    assert ckpt.latest_step(str(tmp_path)) == 20
+
+    cfg2 = loop.LoopConfig(total_steps=40, ckpt_every=10,
+                           ckpt_dir=str(tmp_path), log_every=100)
+    p2, o2, result = loop.run(step, params, opt, batches(), cfg2)
+    assert result.resumed_from == 20
+    assert result.steps_run == 20                 # only the remaining steps
+    assert result.losses[-1] < result.losses[0]
+    assert ckpt.latest_step(str(tmp_path)) == 40
+
+
+def test_elastic_reshard(tmp_path):
+    """Restore onto the *current* mesh regardless of saving layout."""
+    from jax.sharding import PartitionSpec as P
+    t = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+    ckpt.save(str(tmp_path), 1, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    restored, _ = ckpt.restore_sharded(str(tmp_path), t,
+                                       {"w": P("data", None)}, mesh)
+    np.testing.assert_allclose(np.asarray(restored["w"]), np.asarray(t["w"]))
+    assert restored["w"].sharding.spec == P("data", None)
+
+
+def test_compression_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32)),
+         "b": jnp.asarray(rng.normal(size=(128,)).astype(np.float32) * 10)}
+    dec, res = compress.roundtrip(g)
+    for k in g:
+        scale = float(jnp.abs(g[k]).max())
+        err = float(jnp.abs(dec[k] - g[k]).max())
+        assert err <= scale / 127.0 + 1e-6
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the accumulated compressed sum converges to the
+    true sum (bias -> 0); without it the quantization bias persists."""
+    rng = np.random.default_rng(1)
+    gs = [{"a": jnp.asarray(rng.normal(size=(256,)).astype(np.float32)
+                            * 0.001)} for _ in range(50)]
+    true_sum = sum(float(g["a"].sum()) for g in gs)
+    res = None
+    acc = 0.0
+    for g in gs:
+        dec, res = compress.roundtrip(g, res)
+        acc += float(dec["a"].sum())
+    # residual carries what's missing: acc + residual == true within fp
+    assert abs(acc + float(res["a"].sum()) - true_sum) < 1e-2
+
+
+def test_adamw_converges_and_clips():
+    ocfg = adamw.AdamWConfig(lr=0.1, total_steps=100, warmup_steps=0,
+                             weight_decay=0.0, clip_norm=1.0,
+                             min_lr_frac=1.0)   # constant lr for this test
+    params = {"x": jnp.asarray([10.0, -10.0])}
+    opt = adamw.init(params, ocfg)
+    for _ in range(100):
+        grads = {"x": 2 * params["x"]}
+        params, opt, m = adamw.update(grads, opt, params, ocfg)
+    assert float(jnp.abs(params["x"]).max()) < 0.5
+    assert float(m["grad_norm"]) >= 0
+
+
+def test_bf16_optimizer_state():
+    ocfg = adamw.AdamWConfig(bf16_state=True, total_steps=10)
+    params = {"x": jnp.zeros(4, jnp.bfloat16)}
+    opt = adamw.init(params, ocfg)
+    assert opt.mu["x"].dtype == jnp.bfloat16
+    assert opt.nu["x"].dtype == jnp.float32
+    p2, o2, _ = adamw.update({"x": jnp.ones(4, jnp.bfloat16)}, opt, params,
+                             ocfg)
+    assert p2["x"].dtype == jnp.bfloat16

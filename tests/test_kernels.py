@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), swept over shapes
+and dtypes, as the assignment requires."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.topology import balanced_tree, flat_topology
+from repro.graph.generators import rmat
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.bag_combine import bag_combine
+from repro.kernels.bsr_spmm import bsr_spmm, to_bsr
+from repro.kernels.partition_gain import partition_gain_ell
+from repro.kernels.quotient_link_loads import quotient_link_loads
+
+
+@pytest.mark.parametrize("n,m,k", [(50, 150, 4), (200, 800, 16),
+                                   (33, 70, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_partition_gain_ell_sweep(n, m, k, dtype, rng):
+    g = rmat(n, m, seed=n + k)
+    part = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    nbr_idx, nbr_w = kops.to_ell(n, g.senders, g.receivers, g.edge_weight)
+    out = kops.partition_gain_pallas(part, jnp.asarray(nbr_idx),
+                                     jnp.asarray(nbr_w.astype(dtype)), k,
+                                     interpret=True)
+    ref = kref.partition_gain_ref(part, jnp.asarray(nbr_idx),
+                                  jnp.asarray(nbr_w), k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+    # and against the arc-list XLA path
+    xla = kops.partition_gain(part, jnp.asarray(g.senders),
+                              jnp.asarray(g.receivers),
+                              jnp.asarray(g.edge_weight), k)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(xla), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("branching", [(2, 2), (2, 2, 2), (4, 4)])
+@pytest.mark.parametrize("m_blk", [128, 512])
+def test_quotient_link_loads_sweep(branching, m_blk, rng):
+    topo = balanced_tree(branching)
+    k = topo.k
+    g = rmat(120, 500, seed=k)
+    part = rng.integers(0, k, 120)
+    bi = jnp.asarray(part[g.senders], jnp.int32)
+    bj = jnp.asarray(part[g.receivers], jnp.int32)
+    out = quotient_link_loads(bi, bj, jnp.asarray(g.edge_weight),
+                              jnp.asarray(topo.subtree),
+                              jnp.asarray(topo.F_l), k=k, m_blk=m_blk,
+                              interpret=True)
+    ref = kref.quotient_link_loads_ref(bi, bj, jnp.asarray(g.edge_weight),
+                                       jnp.asarray(topo.subtree),
+                                       jnp.asarray(topo.F_l), k=k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("n,feat", [(300, 128), (500, 256), (130, 128)])
+def test_bsr_spmm_sweep(n, feat, rng):
+    g = rmat(n, 4 * n, seed=feat)
+    x = jnp.asarray(rng.normal(size=(n, feat)).astype(np.float32))
+    bsr = kops.prepare_bsr(n, g.senders, g.receivers, g.edge_weight,
+                           block=128)
+    y = kops.gnn_aggregate_bsr(bsr, jnp.pad(
+        x, ((0, bsr[3] * 128 - n), (0, 0))), interpret=True)[:n]
+    ref = kops.gnn_aggregate(jnp.asarray(g.senders),
+                             jnp.asarray(g.receivers),
+                             jnp.asarray(g.edge_weight), x, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("b,d,f", [(32, 10, 64), (100, 5, 200), (8, 50, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bag_combine_sweep(b, d, f, dtype, rng):
+    gathered = jnp.asarray(rng.normal(size=(b, d, f)), dtype)
+    w = jnp.asarray(rng.normal(size=(b, d)), dtype)
+    out = bag_combine(gathered, w, interpret=True)
+    ref = kref.bag_combine_ref(gathered, w)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol,
+                               atol=tol)
+
+
+@pytest.mark.parametrize("v,b,dd,f", [(1000, 64, 8, 64), (50, 16, 4, 32)])
+def test_embedding_bag_vs_ref(v, b, dd, f, rng):
+    table = jnp.asarray(rng.normal(size=(v, f)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, v, (b, dd)), jnp.int32)
+    w = jnp.asarray(rng.normal(size=(b, dd)).astype(np.float32))
+    out = kops.embedding_bag(table, idx, w, pallas=True, interpret=True)
+    ref = kref.embedding_bag_ref(table, idx, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_link_loads_dispatch_matches():
+    topo = balanced_tree((2, 4))
+    g = rmat(80, 300, seed=9)
+    part = jnp.asarray(np.random.default_rng(9).integers(0, topo.k, 80),
+                       jnp.int32)
+    a = kops.link_loads(part, jnp.asarray(g.senders),
+                        jnp.asarray(g.receivers),
+                        jnp.asarray(g.edge_weight),
+                        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l),
+                        topo.k, pallas=True, interpret=True)
+    b = kops.link_loads(part, jnp.asarray(g.senders),
+                        jnp.asarray(g.receivers),
+                        jnp.asarray(g.edge_weight),
+                        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l),
+                        topo.k, pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-3)

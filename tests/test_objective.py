@@ -1,0 +1,150 @@
+"""The paper's objective: JAX quotient-matrix implementation vs the
+path-walking oracle, across every topology generalization of §3.1."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objective, reference
+from repro.core.topology import (balanced_tree, fat_tree_topology,
+                                 flat_topology, make_tree, production_tree,
+                                 torus2d_topology)
+from repro.graph.generators import grid2d, rmat, weighted_nodes
+
+
+def _rand_graph(n=60, m=180, seed=0, weighted=True):
+    g = rmat(n, m, seed=seed)
+    if weighted:
+        g = weighted_nodes(g, seed=seed)
+    return g
+
+
+def _jx_makespan(g, topo, part):
+    return objective.makespan_tree(
+        jnp.asarray(part, jnp.int32), jnp.asarray(g.senders),
+        jnp.asarray(g.receivers), jnp.asarray(g.edge_weight),
+        jnp.asarray(g.node_weight), jnp.asarray(topo.subtree),
+        jnp.asarray(topo.F_l), k=topo.k)
+
+
+TOPOLOGIES = [
+    ("flat8", lambda: flat_topology(8)),
+    ("flat8_F3", lambda: flat_topology(8, F=3.0)),
+    ("tree_2_2_2", lambda: balanced_tree((2, 2, 2))),
+    ("tree_costs", lambda: balanced_tree((2, 4), F=1.0,
+                                         level_cost=(8.0, 1.0))),
+    ("production", lambda: production_tree(2, 2, 4)),
+    ("fat_tree", lambda: fat_tree_topology(16)),
+]
+
+
+@pytest.mark.parametrize("name,mk", TOPOLOGIES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_makespan_matches_oracle(name, mk, seed):
+    topo = mk()
+    g = _rand_graph(seed=seed)
+    rng = np.random.default_rng(seed)
+    part = rng.integers(0, topo.k, g.n_nodes)
+    br = _jx_makespan(g, topo, part)
+    m_ref, comp_ref, comm_ref = reference.makespan_ref(part, g, topo)
+    np.testing.assert_allclose(np.asarray(br.comp), comp_ref, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(br.comm), comm_ref, rtol=1e-4,
+                               atol=1e-4)
+    assert abs(float(br.makespan) - m_ref) <= 1e-3 * max(1.0, m_ref)
+
+
+def test_vertex_weighted_variant():
+    """§3.1: bin load = sum of vertex weights."""
+    topo = flat_topology(4)
+    g = weighted_nodes(_rand_graph(), seed=3)
+    part = np.random.default_rng(0).integers(0, 4, g.n_nodes)
+    br = _jx_makespan(g, topo, part)
+    for b in range(4):
+        assert np.isclose(float(br.comp[b]), g.node_weight[part == b].sum(),
+                          rtol=1e-5)
+
+
+def test_router_generalization():
+    """§3.1: routers take no load; they only appear as path interior."""
+    # path: root(router) - mid(router) - 2 leaves each
+    parent = [-1, 0, 0, 1, 1, 2, 2]
+    topo = make_tree(parent)
+    assert topo.k == 4                      # four leaves compute
+    assert topo.n_links == 6
+    g = grid2d(6, 6)
+    part = np.arange(g.n_nodes) % 4
+    m_ref, comp_ref, comm_ref = reference.makespan_ref(part, g, topo)
+    br = _jx_makespan(g, topo, part)
+    np.testing.assert_allclose(np.asarray(br.comm), comm_ref, atol=1e-3)
+    # traffic between leaves under different mid-routers crosses 4 links
+    assert comm_ref[np.argmax(comm_ref)] > 0
+
+
+def test_routing_oracle_torus_single_and_multipath():
+    g = _rand_graph(40, 120, seed=5)
+    rng = np.random.default_rng(5)
+    for multipath in (False, True):
+        topo = torus2d_topology(3, 3, multipath=multipath)
+        part = rng.integers(0, topo.k, g.n_nodes)
+        br = objective.makespan_routing(
+            jnp.asarray(part, jnp.int32), jnp.asarray(g.senders),
+            jnp.asarray(g.receivers), jnp.asarray(g.edge_weight),
+            jnp.asarray(g.node_weight), jnp.asarray(topo.path_incidence),
+            jnp.asarray(topo.F_l), k=topo.k)
+        m_ref, comp_ref, comm_ref = reference.makespan_routing_ref(
+            part, g, topo)
+        np.testing.assert_allclose(np.asarray(br.comm), comm_ref, atol=1e-3)
+    # XY and YX dimension-ordered routes have equal hop counts, so the
+    # TOTAL link traffic is conserved under multipath (the bottleneck may
+    # go either way — splitting can land on an already-hot link).
+    topo1 = torus2d_topology(3, 3, multipath=False)
+    topo2 = torus2d_topology(3, 3, multipath=True)
+    part = rng.integers(0, 9, g.n_nodes)
+    _, _, c1 = reference.makespan_routing_ref(part, g, topo1)
+    _, _, c2 = reference.makespan_routing_ref(part, g, topo2)
+    assert abs(c1.sum() - c2.sum()) < 1e-4 * max(c1.sum(), 1.0)
+
+
+def test_total_cut_and_cvol():
+    g = _rand_graph(seed=7)
+    part = np.random.default_rng(7).integers(0, 6, g.n_nodes)
+    W = objective.quotient_matrix(
+        jnp.asarray(part, jnp.int32), jnp.asarray(g.senders),
+        jnp.asarray(g.receivers), jnp.asarray(g.edge_weight), 6)
+    assert np.isclose(float(objective.total_cut(W)),
+                      reference.total_cut_ref(part, g), rtol=1e-5)
+    cvol = objective.comm_volumes(
+        jnp.asarray(part, jnp.int32), jnp.asarray(g.senders),
+        jnp.asarray(g.receivers), jnp.asarray(g.node_weight), 6)
+    # oracle for cvol
+    ref = np.zeros(6)
+    for v in range(g.n_nodes):
+        nbrs = g.receivers[g.offsets[v]:g.offsets[v + 1]]
+        foreign = {int(part[u]) for u in nbrs} - {int(part[v])}
+        ref[part[v]] += g.node_weight[v] * len(foreign)
+    np.testing.assert_allclose(np.asarray(cvol), ref, rtol=1e-5)
+
+
+def test_soft_cost_approaches_max():
+    comp = jnp.asarray([3.0, 7.0, 1.0])
+    comm = jnp.asarray([2.0, 9.0])
+    F_l = jnp.ones(2)
+    exact = 9.0
+    prev = None
+    for temp in (1.0, 0.3, 0.05, 0.01):
+        s = float(objective.soft_cost(comp, comm, F_l, jnp.float32(temp)))
+        assert s >= exact - 1e-4
+        if prev is not None:
+            assert s <= prev + 1e-6
+        prev = s
+    assert abs(prev - exact) < 0.2
+
+
+def test_load_gradients_are_softmax_weights():
+    comp = jnp.asarray([3.0, 7.0, 1.0])
+    comm = jnp.asarray([2.0, 9.0])
+    F_l = jnp.asarray([1.0, 0.5])
+    g_comp, g_link = objective.load_gradients(comp, comm, F_l,
+                                              jnp.float32(0.1))
+    total = float(g_comp.sum() + (g_link / F_l).sum())
+    assert abs(total - 1.0) < 1e-5
+    assert float(g_comp[1]) > float(g_comp[0]) > float(g_comp[2])
