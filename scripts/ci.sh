@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 gate — the exact command CI runs (.github/workflows/ci.yml).
+# Usage: scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

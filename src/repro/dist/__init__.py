@@ -1,0 +1,9 @@
+"""Distribution subsystem: named-axis sharding rules (``sharding``) and
+int8 error-feedback gradient compression (``compress``).
+
+Import-safe before jax device initialization: nothing here touches device
+state at import time (the dry-run sets XLA_FLAGS and only then imports).
+"""
+from repro.dist import compress, sharding  # noqa: F401
+
+__all__ = ["compress", "sharding"]

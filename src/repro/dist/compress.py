@@ -1,0 +1,68 @@
+"""Int8 gradient compression with error feedback.
+
+``roundtrip`` simulates the compress -> all-reduce -> decompress path the
+launcher enables under ``grad_compress=True`` (train/steps.py): each float
+leaf is quantized to int8 with a per-tensor scale, immediately dequantized,
+and the quantization error is carried in a float32 residual that is added
+back into the NEXT step's gradient (error feedback, 1-bit-Adam style). The
+sum of everything emitted plus the final residual equals the true gradient
+sum exactly (up to float association), so the quantization bias does not
+accumulate. Under pjit the int8 leaf is what the DP all-reduce moves — a
+4x payload cut vs f32, 2x vs bf16.
+
+Integer and boolean leaves (step counters, token counts) pass through
+untouched with an all-zero residual.
+
+Pure jnp, jit-safe, shape-polymorphic; state is a pytree mirroring the
+gradients, threadable through the train loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LEVELS = 127  # symmetric int8: q in [-127, 127], -128 unused
+
+
+def _zero_state(g: jnp.ndarray) -> jnp.ndarray:
+    if jnp.issubdtype(g.dtype, jnp.floating):
+        return jnp.zeros(g.shape, jnp.float32)
+    return jnp.zeros_like(g)
+
+
+def init_state(grads: Any) -> Any:
+    """All-zero residual tree for ``roundtrip`` (f32 for float leaves)."""
+    return jax.tree.map(_zero_state, grads)
+
+
+def _roundtrip_leaf(g: jnp.ndarray,
+                    res: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if not jnp.issubdtype(g.dtype, jnp.floating):
+        return g, res
+    x = g.astype(jnp.float32) + res
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny) / LEVELS
+    q = jnp.clip(jnp.round(x / scale), -LEVELS, LEVELS).astype(jnp.int8)
+    emitted = (q.astype(jnp.float32) * scale).astype(g.dtype)
+    # residual measures what was ACTUALLY delivered (post-cast): for bf16
+    # grads the cast error would otherwise accumulate as uncorrected bias
+    return emitted, x - emitted.astype(jnp.float32)
+
+
+def roundtrip(grads: Any,
+              state: Optional[Any] = None) -> Tuple[Any, Any]:
+    """(grads, state) -> (dequantized grads, updated residual state).
+
+    ``state=None`` starts from a zero residual. The per-leaf error bound is
+    ``max|g + res| / 127`` (half a quantization step after rounding); the
+    residual leaf holds exactly ``(g + res) - dequantized``.
+    """
+    if state is None:
+        state = init_state(grads)
+    leaves, treedef = jax.tree.flatten(grads)
+    pairs = [_roundtrip_leaf(g, r)
+             for g, r in zip(leaves, jax.tree.leaves(state))]
+    return (treedef.unflatten([p[0] for p in pairs]),
+            treedef.unflatten([p[1] for p in pairs]))

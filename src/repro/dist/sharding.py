@@ -1,0 +1,205 @@
+"""Named-axis sharding rules: the one table per model family that maps
+*logical* tensor axes ("batch", "fsdp", "rows", ...) onto *mesh* axes
+("pod", "data", "model").
+
+Models annotate with logical names only (``rules.spec("fsdp", "model")``,
+``rules.shard(x, "batch", "seq", None)``); the same model code then lowers
+unchanged on 1 CPU device (every rule resolves to ``None``), the 256-chip
+single-pod mesh and the 512-chip multi-pod mesh — the table, not the model,
+decides the layout.
+
+Resolution semantics (the "lookup precedence" contract, tested in
+``tests/test_dist.py``):
+
+  * ``None`` always means replicated — it never consults the table.
+  * A logical name resolves to the rule's mesh axes *filtered to the axes
+    the mesh actually has* (so ``lm_rules(())`` replicates everything and
+    a single-pod mesh silently drops the "pod" entry of a multi-pod rule).
+  * Within one spec a mesh axis can appear only once (a GSPMD error
+    otherwise): the first logical axis to claim it wins, later claims
+    resolve to ``None``.
+  * Unknown logical names raise ``KeyError`` — typos must not silently
+    replicate a 236B parameter tensor.
+
+``sanitize_spec`` / ``sanitize_tree`` drop mesh axes that do not evenly
+divide the corresponding dimension (dropping from the innermost axis out,
+so a ("pod", "data") product that fails may still keep "pod").
+``tree_shardings`` turns a spec pytree into ``NamedSharding``s for
+``jax.jit(..., in_shardings=...)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+AxisEntry = Tuple[str, ...]
+
+
+def _ambient_mesh():
+    """The mesh of the enclosing ``with mesh:`` scope, or None (same idiom
+    as the models' shard_map dispatch — does not initialize the backend)."""
+    from jax._src import mesh as _mesh_lib
+    m = _mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+class Rules:
+    """Logical-axis -> mesh-axes rule table (see module docstring)."""
+
+    def __init__(self, table: Dict[str, Sequence[str]],
+                 mesh_axes: Sequence[str]):
+        self.mesh_axes: Tuple[str, ...] = tuple(mesh_axes)
+        self.table: Dict[str, AxisEntry] = {
+            name: tuple(a for a in axes if a in self.mesh_axes)
+            for name, axes in table.items()
+        }
+
+    def _resolve(self, name: Optional[str],
+                 claimed: set) -> Optional[Any]:
+        if name is None:
+            return None
+        if name not in self.table:
+            raise KeyError(
+                f"unknown logical axis {name!r}; rules know "
+                f"{sorted(self.table)}")
+        axes = tuple(a for a in self.table[name] if a not in claimed)
+        claimed.update(axes)
+        if not axes:
+            return None
+        return axes[0] if len(axes) == 1 else axes
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """PartitionSpec for a tensor whose dims carry these logical axes."""
+        claimed: set = set()
+        return P(*[self._resolve(name, claimed) for name in logical])
+
+    def shard(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        """``with_sharding_constraint`` under the ambient mesh; a no-op when
+        no mesh is active, every rule resolves to None, or no surviving
+        mesh axis divides its dimension."""
+        spec = self.spec(*logical)
+        if all(a is None for a in spec):
+            return x
+        mesh = _ambient_mesh()
+        if mesh is None:
+            return x
+        spec = sanitize_spec(x.shape, spec, mesh)
+        if all(a is None for a in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Family rule tables
+# ---------------------------------------------------------------------------
+
+def _present(mesh_axes: Sequence[str], *wanted: str) -> AxisEntry:
+    return tuple(a for a in wanted if a in mesh_axes)
+
+
+def lm_rules(mesh_axes: Sequence[str], profile: str = "2d") -> Rules:
+    """LM-family table. Profiles (the dry-run's ``--profile`` values):
+
+      * ``"2d"``   — FSDP x tensor: params ZeRO-shard over "data", head/ffn/
+                     vocab/expert dims over "model"; batch over all dp axes.
+      * ``"fsdp"`` — pure ZeRO: params flat-sharded over ("data", "model"),
+                     no tensor parallelism; batch over ("pod", "data").
+      * ``"sp"``   — "2d" plus sequence parallelism: activation sequence
+                     dims (and the decode KV cache) shard over "model".
+    """
+    dp = _present(mesh_axes, "pod", "data")
+    model = _present(mesh_axes, "model")
+    if profile == "2d":
+        table = {"batch": dp, "seq": (), "fsdp": _present(mesh_axes, "data"),
+                 "model": model, "vocab": model, "expert": model,
+                 "kv_seq": model}
+    elif profile == "fsdp":
+        table = {"batch": dp, "seq": (),
+                 "fsdp": _present(mesh_axes, "data", "model"),
+                 "model": (), "vocab": (), "expert": (), "kv_seq": ()}
+    elif profile == "sp":
+        table = {"batch": dp, "seq": model,
+                 "fsdp": _present(mesh_axes, "data"),
+                 "model": model, "vocab": model, "expert": model,
+                 "kv_seq": model}
+    else:
+        raise ValueError(f"unknown lm sharding profile {profile!r}")
+    return Rules(table, mesh_axes)
+
+
+def gnn_rules(mesh_axes: Sequence[str]) -> Rules:
+    """GNN-family table: node/arc arrays row-shard over the FULL flattened
+    mesh (row counts are padded to 512 = the multi-pod device count, so the
+    product always divides); MLP weights are FSDP x tensor like the LMs."""
+    return Rules({"rows": tuple(mesh_axes),
+                  "batch": _present(mesh_axes, "pod", "data"),
+                  "fsdp": _present(mesh_axes, "data"),
+                  "model": _present(mesh_axes, "model")}, mesh_axes)
+
+
+def recsys_rules(mesh_axes: Sequence[str]) -> Rules:
+    """Two-tower table: embedding tables and candidate matrices row-shard
+    over the full flattened mesh (this is the surface the paper's makespan
+    placement permutes); towers are FSDP x tensor; batch over dp axes."""
+    return Rules({"rows": tuple(mesh_axes),
+                  "cand": tuple(mesh_axes),
+                  "batch": _present(mesh_axes, "pod", "data"),
+                  "fsdp": _present(mesh_axes, "data"),
+                  "model": _present(mesh_axes, "model")}, mesh_axes)
+
+
+# ---------------------------------------------------------------------------
+# Spec sanitation + concrete shardings
+# ---------------------------------------------------------------------------
+
+def sanitize_spec(shape: Sequence[int], spec: P, mesh) -> P:
+    """Drop mesh axes that do not evenly divide their dimension.
+
+    Per-dim: axes the mesh lacks are removed outright, then the entry keeps
+    the longest *prefix* of its mesh axes whose size product divides the
+    dim (dims sharded over ("pod", "data") degrade to ("pod",) before
+    giving up entirely). Entries beyond ``len(shape)`` are dropped; missing
+    trailing entries stay unsharded.
+    """
+    sizes = dict(mesh.shape)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in sizes)
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            if dim % prod == 0:
+                break
+            axes = axes[:-1]
+        out.append(None if not axes
+                   else axes[0] if len(axes) == 1 else axes)
+    return P(*out)
+
+
+def sanitize_tree(tree: Any, specs: Any, mesh) -> Any:
+    """``sanitize_spec`` over a pytree of arrays/ShapeDtypeStructs and its
+    mirror tree of PartitionSpecs (the dry-run runs every argument's spec
+    tree through this before building shardings). ``None`` spec leaves
+    mean replicated and pass through, matching ``tree_shardings``."""
+    leaves, treedef = jax.tree.flatten(tree)
+    spec_leaves = treedef.flatten_up_to(specs)
+    return treedef.unflatten([
+        None if s is None else sanitize_spec(x.shape, s, mesh)
+        for x, s in zip(leaves, spec_leaves)])
+
+
+def tree_shardings(mesh, specs: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree over ``mesh`` (None
+    leaves mean replicated)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, P() if s is None else s), specs,
+        is_leaf=lambda s: s is None or isinstance(s, P))

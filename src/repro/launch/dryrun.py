@@ -200,7 +200,7 @@ def _compile(arch, shape, mesh, overrides=None, grad_compress=False,
 
 
 def _cost(compiled) -> Tuple[float, float]:
-    c = compiled.cost_analysis() or {}
+    c = hlo_cost.normalize_cost_analysis(compiled.cost_analysis())
     return float(c.get("flops", 0.0)), float(c.get("bytes accessed", 0.0))
 
 

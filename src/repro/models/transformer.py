@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.dist.sharding import Rules
+from repro.dist.sharding import Rules, _ambient_mesh
 from repro.models import common
 from repro.models.common import (apply_rope, cross_entropy, dense_init,
                                  flash_attention, rms_norm, rope_freqs)
@@ -254,12 +254,6 @@ def init(key, cfg: TransformerConfig, rules: Rules) -> Tuple[Params, Params]:
 class MoEStats(NamedTuple):
     aux_loss: jnp.ndarray
     dropped_frac: jnp.ndarray
-
-
-def _ambient_mesh():
-    from jax._src import mesh as _mesh_lib
-    m = _mesh_lib.thread_resources.env.physical_mesh
-    return None if m.empty else m
 
 
 def _moe_routed_shardmap(p: Params, x: jnp.ndarray, cfg: TransformerConfig,

@@ -1,7 +1,10 @@
 """Hypothesis property tests on the system's invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import objective, reference
 from repro.core.mapping import block_placement
@@ -25,7 +28,12 @@ def _graph_strategy(draw, max_n=24):
     return from_edges(n, u[keep], v[keep], w[keep], nw), seed
 
 
-graphs = st.builds(lambda: None)  # placeholder; use composite below
+@st.composite
+def graphs(draw, max_n=24):
+    """Random symmetric weighted graphs (the composite strategy the
+    docstring promises; ``graph_and_part`` composes a topology on top)."""
+    g, _seed = _graph_strategy(draw, max_n)
+    return g
 
 
 @st.composite
@@ -96,6 +104,19 @@ def test_block_placement_is_permutation(k, n, seed):
     assert len(set(pl.perm.tolist())) == n           # injective
     for v in range(n):
         assert pl.bin_of_row[pl.perm[v]] == part[v]
+
+
+@given(graphs())
+@settings(max_examples=25, deadline=None)
+def test_graph_strategy_invariants(g):
+    """Graphs drawn from the strategy satisfy the arc-list contract:
+    symmetric arcs, CSR-sorted senders, degrees consistent with offsets."""
+    assert g.senders.shape == g.receivers.shape == g.edge_weight.shape
+    assert g.n_arcs % 2 == 0
+    assert (np.diff(g.senders) >= 0).all()           # CSR order
+    assert g.degrees().sum() == g.n_arcs
+    fwd = set(zip(g.senders.tolist(), g.receivers.tolist()))
+    assert all((v, u) in fwd for u, v in fwd)        # symmetric
 
 
 @given(st.integers(0, 100))
