@@ -8,7 +8,7 @@ refinement seeded FROM the emulation — takes the best of both and is what
 the framework ships as the default for mesh-like inputs."""
 from __future__ import annotations
 
-from benchmarks.common import emit, spmv_step_time, timed
+from benchmarks.common import emit, spmv_step_time, timed, tiny
 from repro.core import baselines
 from repro.core.partitioner import PartitionConfig, partition
 from repro.core.refine import RefineConfig, refine
@@ -18,13 +18,16 @@ from repro.graph.generators import grid3d, rmat
 
 def run() -> None:
     topo = production_tree(2, 4, 4)       # 32 chips, DCN/ICI asymmetry
-    for name, g in [("grid3d_14", grid3d(14, 14, 14)),
-                    ("rmat_10k", rmat(10000, 60000, seed=2))]:
+    side = tiny(14, 6)
+    n, m = tiny((10000, 60000), (1000, 6000))
+    for name, g in [(f"grid3d_{side}", grid3d(side, side, side)),
+                    (f"rmat_{n}", rmat(n, m, seed=2))]:
         ours, t_ours = timed(partition, g, topo,
-                             PartitionConfig(seed=0, final_rounds=160))
+                             PartitionConfig(seed=0,
+                                             final_rounds=tiny(160, 8)))
         flat2, t_flat = timed(baselines.flat_twice_partition, g, topo)
         (hyb, m_hyb, _), t_hyb = timed(
-            refine, g, topo, flat2, RefineConfig(rounds=96))
+            refine, g, topo, flat2, RefineConfig(rounds=tiny(96, 8)))
         s_ours = spmv_step_time(g, topo, ours.part)
         s_flat = spmv_step_time(g, topo, flat2)
         s_hyb = spmv_step_time(g, topo, hyb)

@@ -9,18 +9,20 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, spmv_step_time, timed
+from benchmarks.common import emit, spmv_step_time, timed, tiny
 from repro.core import baselines
 from repro.core.partitioner import PartitionConfig, partition
 from repro.core.topology import balanced_tree, production_tree
 from repro.graph.generators import grid2d, grid3d, rmat
 
+_G2, _G3 = tiny(64, 16), tiny(16, 6)
+_RN, _RM = tiny((20000, 120000), (2000, 12000))
 CASES = [
-    ("grid2d_64", lambda: grid2d(64, 64),
+    (f"grid2d_{_G2}", lambda: grid2d(_G2, _G2),
      lambda: balanced_tree((2, 8), level_cost=(8.0, 1.0))),
-    ("grid3d_16", lambda: grid3d(16, 16, 16),
+    (f"grid3d_{_G3}", lambda: grid3d(_G3, _G3, _G3),
      lambda: production_tree(2, 4, 4)),
-    ("rmat_20k", lambda: rmat(20000, 120000, seed=1),
+    (f"rmat_{_RN}", lambda: rmat(_RN, _RM, seed=1),
      lambda: balanced_tree((2, 8), level_cost=(8.0, 1.0))),
 ]
 

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, timed, tiny
 from repro.core import baselines, mapping
 from repro.core.topology import balanced_tree, production_tree
 from repro.graph.generators import rmat
@@ -18,15 +18,16 @@ def expert_placement() -> None:
     """DeepSeek-V2-scale: 160 experts with clustered co-activation mapped
     onto 2 pods x 8 groups; bottleneck = hottest inter-group link."""
     rng = np.random.default_rng(0)
-    e = 160
+    e, per = tiny((160, 20), (32, 4))
     traffic = rng.uniform(0, 1, (e, e))
     traffic = traffic + traffic.T
     np.fill_diagonal(traffic, 0)
     for c in range(8):                      # co-activation clusters
-        idx = np.arange(c * 20, (c + 1) * 20)
+        idx = np.arange(c * per, (c + 1) * per)
         traffic[np.ix_(idx, idx)] += 8.0
     flops = np.ones(e)
-    topo = balanced_tree((2, 8, 10), level_cost=(8.0, 1.0, 1.0))
+    topo = balanced_tree(tiny((2, 8, 10), (2, 8, 2)),
+                         level_cost=(8.0, 1.0, 1.0))
     (part, res), secs = timed(mapping.expert_placement, traffic, flops,
                               topo)
     iu = np.triu_indices(e, 1)
@@ -36,7 +37,7 @@ def expert_placement() -> None:
     scatter = rng.permutation(e) % topo.k
     s_ours = baselines.score_all(g, topo, part)
     s_sc = baselines.score_all(g, topo, scatter)
-    emit("placement", "moe_experts_160", secs,
+    emit("placement", f"moe_experts_{e}", secs,
          bottleneck_ours=round(s_ours["comm_max"], 1),
          bottleneck_scatter=round(s_sc["comm_max"], 1),
          makespan_ours=round(s_ours["makespan"], 1),
@@ -49,7 +50,7 @@ def table_placement() -> None:
     (items bought together) placed over the machine tree; bottleneck =
     hottest device during the lookup all-to-all."""
     rng = np.random.default_rng(1)
-    rows = 4096
+    rows = tiny(4096, 512)
     freq = (np.arange(1, rows + 1) ** -1.1)
     freq = (freq / freq.sum() * rows).astype(np.float32)
     g_co = rmat(rows, 6 * rows, seed=2)
@@ -62,7 +63,7 @@ def table_placement() -> None:
     hashed = rng.permutation(rows) % topo.k
     s_ours = baselines.score_all(g, topo, res.part)
     s_hash = baselines.score_all(g, topo, hashed)
-    emit("placement", "embedding_rows_4096", secs,
+    emit("placement", f"embedding_rows_{rows}", secs,
          hot_device_ours=round(s_ours["comp_max"], 1),
          hot_device_hash=round(s_hash["comp_max"], 1),
          hot_link_ours=round(s_ours["comm_max"], 1),
@@ -72,7 +73,7 @@ def table_placement() -> None:
 def bsr_locality() -> None:
     """Block placement concentrates edges into fewer BSR blocks — the same
     SpMM kernel touches less memory on a well-mapped graph."""
-    g = rmat(4096, 32768, seed=3)
+    g = rmat(*tiny((4096, 32768), (1024, 8192)), seed=3)
     topo = balanced_tree((4, 8))
     from repro.core.partitioner import PartitionConfig, partition
     res, secs = timed(partition, g, topo, PartitionConfig(seed=0))
@@ -84,7 +85,7 @@ def bsr_locality() -> None:
                              g2.edge_weight, 128)
     d0 = bsr_density(r0, nb0, nb0)
     d1 = bsr_density(r1, nb1, nb1)
-    emit("placement", "bsr_locality_4096", secs,
+    emit("placement", f"bsr_locality_{g.n_nodes}", secs,
          block_density_before=round(d0, 4),
          block_density_after=round(d1, 4),
          blocks_before=int(r0.shape[0]), blocks_after=int(r1.shape[0]))

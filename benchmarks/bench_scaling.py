@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, timed, tiny
 from repro.core import baselines
 from repro.core.partitioner import PartitionConfig, partition
 from repro.core.refine import RefineConfig
@@ -15,10 +15,12 @@ from repro.graph.generators import grid2d, rmat
 def run() -> None:
     # size scaling at k=32
     topo = balanced_tree((2, 4, 4), level_cost=(8.0, 1.0, 1.0))
-    for n, m in [(10_000, 60_000), (100_000, 600_000),
-                 (400_000, 2_400_000)]:
+    for n, m in tiny([(10_000, 60_000), (100_000, 600_000),
+                      (400_000, 2_400_000)],
+                     [(2_000, 12_000)]):
         g = rmat(n, m, seed=0)
-        cfg = PartitionConfig(seed=0, refine=RefineConfig(rounds=32))
+        cfg = PartitionConfig(seed=0,
+                              refine=RefineConfig(rounds=tiny(32, 8)))
         res, secs = timed(partition, g, topo, cfg)
         rand = baselines.random_partition(n, topo.k)
         m_rand = baselines.score_all(g, topo, rand)["makespan"]
@@ -28,10 +30,13 @@ def run() -> None:
              edges_per_sec=int(m / max(secs, 1e-9)))
 
     # k scaling to the production tree (512 chips)
-    g = grid2d(256, 256)
-    for pods, rows, chips in [(1, 4, 4), (1, 16, 16), (2, 16, 16)]:
+    side = tiny(256, 48)
+    g = grid2d(side, side)
+    for pods, rows, chips in tiny([(1, 4, 4), (1, 16, 16), (2, 16, 16)],
+                                  [(1, 4, 4), (1, 16, 16)]):
         topo = production_tree(pods, rows, chips)
-        cfg = PartitionConfig(seed=0, refine=RefineConfig(rounds=24))
+        cfg = PartitionConfig(seed=0,
+                              refine=RefineConfig(rounds=tiny(24, 8)))
         res, secs = timed(partition, g, topo, cfg)
         emit("scaling_k", f"tree_{pods}x{rows}x{chips}", secs,
              k=topo.k, makespan=round(res.makespan, 1),

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, timed, tiny
 from repro.core import baselines, reference
 from repro.core.partitioner import PartitionConfig, partition
 from repro.core.topology import balanced_tree
@@ -52,8 +52,10 @@ def bfs_round_cost(g: Graph, topo, part, source: int) -> float:
 
 def run() -> None:
     topo = balanced_tree((2, 4), level_cost=(6.0, 1.0))
-    for name, g in [("low_diam_rmat", rmat(4000, 24000, seed=3)),
-                    ("high_diam_grid", grid2d(64, 64))]:
+    side = tiny(64, 24)
+    for name, g in [("low_diam_rmat",
+                     rmat(*tiny((4000, 24000), (800, 4800)), seed=3)),
+                    ("high_diam_grid", grid2d(side, side))]:
         ours = partition(g, topo, PartitionConfig(seed=0)).part
         cut = baselines.total_cut_partition(g, topo.k)
         rng = np.random.default_rng(0)

@@ -9,7 +9,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, tiny
 from repro.core import baselines
 from repro.core.partitioner import PartitionConfig, partition
 from repro.core.topology import balanced_tree
@@ -17,7 +17,8 @@ from repro.graph.generators import grid2d
 
 
 def run() -> None:
-    g = grid2d(48, 48)
+    side = tiny(48, 16)
+    g = grid2d(side, side)
     mk = lambda F: balanced_tree((2, 4), F=F, level_cost=(6.0 * F, F))
     pareto = []
     for F in (0.05, 0.2, 1.0, 5.0):

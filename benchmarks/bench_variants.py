@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, timed, tiny
 from repro.core import baselines, objective, reference
 from repro.core.partitioner import PartitionConfig, partition
 from repro.core.topology import (fat_tree_topology, make_tree,
@@ -13,7 +13,7 @@ from repro.graph.generators import grid2d, rmat, weighted_nodes
 
 
 def run() -> None:
-    g = grid2d(32, 32)
+    g = grid2d(*tiny((32, 32), (16, 16)))
 
     # routers: star-of-stars with router interior
     parent = [-1] + [0] * 4 + [1 + i // 4 for i in range(16)]
@@ -33,7 +33,7 @@ def run() -> None:
          makespan_cut_baseline=round(s_cut["makespan"], 1))
 
     # routing oracle: torus, single vs multipath
-    g2 = rmat(2000, 9000, seed=4)
+    g2 = rmat(*tiny((2000, 9000), (500, 2000)), seed=4)
     rng = np.random.default_rng(0)
     for mp in (False, True):
         topo_t = torus2d_topology(4, 4, multipath=mp)
@@ -44,7 +44,8 @@ def run() -> None:
              total_link=round(comm.sum(), 1))
 
     # vertex weights
-    gw = weighted_nodes(rmat(3000, 15000, seed=5), seed=5, lo=0.1, hi=8.0)
+    gw = weighted_nodes(rmat(*tiny((3000, 15000), (800, 4000)), seed=5),
+                        seed=5, lo=0.1, hi=8.0)
     from repro.core.topology import balanced_tree
     topo_w = balanced_tree((4, 4))
     res_w, secs = timed(partition, gw, topo_w, PartitionConfig(seed=0))

@@ -1,6 +1,12 @@
-"""Shared benchmark utilities: modeled step times + CSV emission."""
+"""Shared benchmark utilities: modeled step times + CSV emission.
+
+``REPRO_BENCH_TINY=1`` shrinks every suite to smoke sizes — the CI bench
+tier (``BENCH_SMOKE=1 scripts/ci.sh``) runs each ``bench_*.py`` that way:
+timings are informational, exceptions fail the gate.
+"""
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List
 
@@ -8,6 +14,14 @@ import numpy as np
 
 from repro.core import baselines
 from repro.core.topology import TreeTopology
+
+TINY = os.environ.get("REPRO_BENCH_TINY", "") == "1"
+
+
+def tiny(full, small):
+    """``full`` normally, ``small`` under REPRO_BENCH_TINY=1."""
+    return small if TINY else full
+
 
 ROWS: List[Dict] = []
 

@@ -1,6 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 gate — the exact command CI runs (.github/workflows/ci.yml).
 # Usage: scripts/ci.sh [extra pytest args]
+#        BENCH_SMOKE=1 scripts/ci.sh   # additionally run the benchmark
+#                                      # smoke tier: every benchmarks/
+#                                      # bench_*.py at tiny sizes —
+#                                      # timings are informational,
+#                                      # exceptions fail the gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+python -m pytest -x -q "$@"
+
+if [[ "${BENCH_SMOKE:-0}" == "1" ]]; then
+  echo "== benchmark smoke tier (REPRO_BENCH_TINY=1) =="
+  for b in benchmarks/bench_*.py; do
+    mod="benchmarks.$(basename "$b" .py)"
+    echo "-- $mod"
+    REPRO_BENCH_TINY=1 python -c "import importlib; importlib.import_module('$mod').run()"
+  done
+fi

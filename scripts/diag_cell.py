@@ -18,8 +18,9 @@ import jax       # noqa: E402
 from repro import configs                         # noqa: E402
 from repro.launch import hlo_cost as hc           # noqa: E402
 from repro.launch import mesh as mesh_lib         # noqa: E402
-from repro.launch.dryrun import (_compile, _group_size, _link_bytes,  # noqa
-                                 _RESULT_RE)
+from repro.launch.collectives import (_RESULT_RE, _group_size,  # noqa: E402
+                                      _link_bytes)
+from repro.launch.dryrun import _compile          # noqa: E402
 
 
 def main():

@@ -39,6 +39,9 @@ class ArchDef:
     smoke_batch: Callable[[], Dict[str, np.ndarray]]
     model_flops: Callable[[str], float]        # useful fwd+bwd (or fwd) FLOPs
     notes: str = ""
+    # Sharding profiles this arch's dry-run grid exercises (the --profile
+    # values rules_for accepts for the family; DESIGN.md §Sharding-profiles).
+    profiles: Tuple[str, ...] = ("2d",)
 
 
 def sds(shape, dtype=jnp.float32):

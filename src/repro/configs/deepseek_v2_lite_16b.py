@@ -22,4 +22,10 @@ SMOKE = TransformerConfig(
     qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
     dtype=jnp.float32, remat=False, capacity_factor=4.0)
 
-ARCH = make_lm_archdef(FULL, SMOKE)
+ARCH = make_lm_archdef(
+    FULL, SMOKE,
+    notes=("64 routed experts: the 'expert' sharding profile gives the "
+           "expert dim its own mesh axis (pod), so routed FFN weights and "
+           "dispatch buffers spread across pods — the mapping grid compares "
+           "it against 2d/fsdp/sp under searched vs identity device "
+           "orders (DESIGN.md §Sharding-profiles)."))

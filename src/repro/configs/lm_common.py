@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -12,8 +12,14 @@ from repro.models.transformer import TransformerConfig
 
 
 def make_lm_archdef(full: TransformerConfig, smoke: TransformerConfig,
-                    notes: str = "") -> cc.ArchDef:
+                    notes: str = "",
+                    profiles: Tuple[str, ...] = None) -> cc.ArchDef:
     shapes = cc.lm_shape_grid(full_attention=True)
+    if profiles is None:
+        # every LM compiles under all four profiles; "expert" only changes
+        # the layout for MoE archs but stays valid (== "2d") on dense ones
+        from repro.dist.sharding import LM_PROFILES
+        profiles = LM_PROFILES
 
     def make_config(shape_name: str) -> TransformerConfig:
         meta = shapes[shape_name].meta
@@ -30,4 +36,4 @@ def make_lm_archdef(full: TransformerConfig, smoke: TransformerConfig,
     return cc.ArchDef(
         name=full.name, family="lm", make_config=make_config, shapes=shapes,
         smoke_config=lambda: smoke, smoke_batch=smoke_batch,
-        model_flops=model_flops, notes=notes)
+        model_flops=model_flops, notes=notes, profiles=tuple(profiles))

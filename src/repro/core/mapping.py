@@ -138,26 +138,47 @@ def _axis_orders(size: int) -> List[np.ndarray]:
     return orders
 
 
-def makespan_of_device_map(T: np.ndarray, topo: TreeTopology,
-                           device_to_bin: np.ndarray) -> float:
-    """Score a device->bin assignment: bottleneck link under traffic T.
-    comp is uniform (SPMD: one shard per device), so the comm term decides."""
+def _traffic_edges(T: np.ndarray):
+    """Symmetric arc arrays of the device-pair traffic matrix, ready for
+    ``objective.makespan_tree`` — built once per search, not per candidate
+    (only ``device_to_bin`` changes between candidates)."""
     import jax.numpy as jnp
-    d = T.shape[0]
-    iu = np.triu_indices(d, 1)
+    iu = np.triu_indices(T.shape[0], 1)
     w = T[iu]
     nz = w > 0
     senders = iu[0][nz].astype(np.int32)
     receivers = iu[1][nz].astype(np.int32)
-    s2 = np.concatenate([senders, receivers])
-    r2 = np.concatenate([receivers, senders])
-    w2 = np.concatenate([w[nz], w[nz]]).astype(np.float32)
-    br = objective.makespan_tree(
-        jnp.asarray(device_to_bin, dtype=jnp.int32), jnp.asarray(s2),
-        jnp.asarray(r2), jnp.asarray(w2),
-        jnp.zeros(d, dtype=jnp.float32),  # comp term excluded (uniform)
+    return (jnp.asarray(np.concatenate([senders, receivers])),
+            jnp.asarray(np.concatenate([receivers, senders])),
+            jnp.asarray(np.concatenate([w[nz], w[nz]]).astype(np.float32)))
+
+
+def _device_map_breakdown(T: np.ndarray, topo: TreeTopology,
+                          device_to_bin: np.ndarray, edges=None):
+    import jax.numpy as jnp
+    s2, r2, w2 = edges if edges is not None else _traffic_edges(T)
+    return objective.makespan_tree(
+        jnp.asarray(device_to_bin, dtype=jnp.int32), s2, r2, w2,
+        jnp.zeros(T.shape[0], dtype=jnp.float32),  # comp excluded (uniform)
         jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), k=topo.k)
-    return float(br.comm_max)
+
+
+def makespan_of_device_map(T: np.ndarray, topo: TreeTopology,
+                           device_to_bin: np.ndarray) -> float:
+    """Score a device->bin assignment: bottleneck link under traffic T.
+    comp is uniform (SPMD: one shard per device), so the comm term decides."""
+    return float(_device_map_breakdown(T, topo, device_to_bin).comm_max)
+
+
+def link_loads_of_device_map(T: np.ndarray, topo: TreeTopology,
+                             device_to_bin: np.ndarray) -> np.ndarray:
+    """Raw (un-weighted by F_l) per-link byte loads of a device->bin
+    assignment, in ``topo.link_nodes`` order. The dry-run's mapping report
+    sums the entries whose link depth is 1 to get cross-pod (DCN) bytes.
+    Clamped at 0: the GEMM-based load algebra cancels to small negatives
+    (f32 rounding) on links that carry nothing."""
+    comm = np.asarray(_device_map_breakdown(T, topo, device_to_bin).comm)
+    return np.maximum(comm, 0.0)
 
 
 @dataclasses.dataclass
@@ -171,20 +192,33 @@ class MeshMapping:
 def search_mesh_mapping(mesh_shape: Sequence[int],
                         axis_bytes: Dict[int, float],
                         topo: TreeTopology,
-                        max_axis_perms: Optional[int] = None) -> MeshMapping:
+                        max_axis_perms: Optional[int] = None,
+                        traffic: Optional[np.ndarray] = None) -> MeshMapping:
     """Enumerate logical-axis permutations x per-axis orders; return the
     assignment with the smallest bottleneck-link traffic cost.
 
     The machine tree's leaves are taken in natural order; a candidate maps
     logical device (i_0, .., i_r) to leaf number ``mixed-radix index`` after
-    permuting/reordering axes.
+    permuting/reordering axes. The identity assignment (no permutation,
+    natural per-axis order) is always the first candidate, so the returned
+    bottleneck is never worse than identity's.
+
+    ``traffic`` supplies a measured [D, D] device-pair matrix (e.g. from
+    ``launch.collectives.parse_collectives(..., traffic=True)``) instead of
+    the per-axis ring model built from ``axis_bytes``.
     """
     shape = tuple(mesh_shape)
     d = int(np.prod(shape))
     if topo.k != d:
         raise ValueError(f"topology has {topo.k} bins, mesh has {d} devices")
-    T = collective_traffic_matrix(shape, axis_bytes)
+    if traffic is not None:
+        T = np.asarray(traffic, dtype=np.float64)
+        if T.shape != (d, d):
+            raise ValueError(f"traffic is {T.shape}, mesh has {d} devices")
+    else:
+        T = collective_traffic_matrix(shape, axis_bytes)
     best: Optional[MeshMapping] = None
+    edges = _traffic_edges(T)
     perms = list(itertools.permutations(range(len(shape))))
     if max_axis_perms:
         perms = perms[:max_axis_perms]
@@ -201,7 +235,8 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
             # leaf j holds logical device ids_p.ravel()[j]
             device_to_bin = np.empty(d, dtype=np.int64)
             device_to_bin[ids_p.ravel()] = np.arange(d)
-            cost = makespan_of_device_map(T, topo, device_to_bin)
+            cost = float(_device_map_breakdown(T, topo, device_to_bin,
+                                               edges).comm_max)
             if best is None or cost < best.bottleneck:
                 best = MeshMapping(perm, orders_idx, device_to_bin, cost)
     assert best is not None

@@ -164,6 +164,40 @@ def production_tree(n_pods: int = 2, rows: int = 16, chips: int = 16,
                          level_cost=(F * rel, F, F))
 
 
+def mesh_tree(mesh_shape: Sequence[int], F: float = 1.0) -> TreeTopology:
+    """Machine tree whose leaves (in natural order) back a production mesh:
+    the multi-pod (2, 16, 16) mesh gets the two-pod tree with the expensive
+    DCN level, the single-pod (16, 16) mesh the one-pod tree. This is the
+    topology ``core.mapping.search_mesh_mapping`` scores against when the
+    dry-run picks the logical -> physical device order (DESIGN.md §6)."""
+    shape = tuple(mesh_shape)
+    if len(shape) == 3:
+        return production_tree(shape[0], shape[1], shape[2], F=F)
+    if len(shape) == 2:
+        return production_tree(1, shape[0], shape[1], F=F)
+    if len(shape) == 1:
+        return guess_tree(shape[0], F=F)
+    raise ValueError(f"no machine tree for mesh shape {shape}")
+
+
+def guess_tree(n: int, F: float = 1.0) -> TreeTopology:
+    """Best-effort machine tree for ``n`` local devices (the launcher's
+    ``--topology-aware`` path, where no pod structure is known): the largest
+    divisor split (a, n // a) with a <= sqrt(n) as an asymmetric two-level
+    tree — upper links carry the DCN-like cost so mapping has something to
+    optimize — falling back to the flat star for prime or single counts."""
+    best = 1
+    a = 2
+    while a * a <= n:
+        if n % a == 0:
+            best = a
+        a += 1
+    if best == 1:
+        return flat_topology(max(n, 1), F=F)
+    rel = ICI_GBPS / DCN_GBPS
+    return balanced_tree((best, n // best), F=F, level_cost=(F * rel, F))
+
+
 @dataclasses.dataclass(frozen=True)
 class RoutingTopology:
     """Routing-graph generalization: arbitrary interconnect + routing oracle.

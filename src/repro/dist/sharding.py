@@ -100,15 +100,28 @@ def _present(mesh_axes: Sequence[str], *wanted: str) -> AxisEntry:
     return tuple(a for a in wanted if a in mesh_axes)
 
 
-def lm_rules(mesh_axes: Sequence[str], profile: str = "2d") -> Rules:
-    """LM-family table. Profiles (the dry-run's ``--profile`` values):
+LM_PROFILES = ("2d", "fsdp", "sp", "expert")
 
-      * ``"2d"``   — FSDP x tensor: params ZeRO-shard over "data", head/ffn/
-                     vocab/expert dims over "model"; batch over all dp axes.
-      * ``"fsdp"`` — pure ZeRO: params flat-sharded over ("data", "model"),
-                     no tensor parallelism; batch over ("pod", "data").
-      * ``"sp"``   — "2d" plus sequence parallelism: activation sequence
-                     dims (and the decode KV cache) shard over "model".
+
+def lm_rules(mesh_axes: Sequence[str], profile: str = "2d") -> Rules:
+    """LM-family table. Profiles (the dry-run's ``--profile`` values; the
+    full logical-axis x profile matrix is DESIGN.md §Sharding-profiles):
+
+      * ``"2d"``     — FSDP x tensor: params ZeRO-shard over "data",
+                       head/ffn/vocab/expert dims over "model"; batch over
+                       all dp axes.
+      * ``"fsdp"``   — pure ZeRO: params flat-sharded over
+                       ("data", "model"), no tensor parallelism; batch over
+                       ("pod", "data").
+      * ``"sp"``     — "2d" plus sequence parallelism: activation sequence
+                       dims (and the decode KV cache) shard over "model".
+      * ``"expert"`` — expert parallelism: the "expert" dim gets its own
+                       mesh axis ("pod" when the mesh has one, else
+                       "model"), so routed-expert weights and dispatch
+                       buffers shard across pods instead of sharing the
+                       tensor axis; everything else as in "2d". On dense
+                       (non-MoE) archs no tensor carries "expert", so the
+                       profile degrades to "2d" exactly.
     """
     dp = _present(mesh_axes, "pod", "data")
     model = _present(mesh_axes, "model")
@@ -125,8 +138,14 @@ def lm_rules(mesh_axes: Sequence[str], profile: str = "2d") -> Rules:
                  "fsdp": _present(mesh_axes, "data"),
                  "model": model, "vocab": model, "expert": model,
                  "kv_seq": model}
+    elif profile == "expert":
+        ep = _present(mesh_axes, "pod") or model
+        table = {"batch": dp, "seq": (), "fsdp": _present(mesh_axes, "data"),
+                 "model": model, "vocab": model, "expert": ep,
+                 "kv_seq": model}
     else:
-        raise ValueError(f"unknown lm sharding profile {profile!r}")
+        raise ValueError(f"unknown lm sharding profile {profile!r}; "
+                         f"known: {LM_PROFILES}")
     return Rules(table, mesh_axes)
 
 

@@ -1,0 +1,255 @@
+"""HLO collective accounting: per-op link/operand byte totals and the
+device-pair traffic matrix that feeds the paper's mesh-mapping search.
+
+Import-safe anywhere (no jax import, no XLA_FLAGS side effects) — the
+512-device env setup lives exclusively in ``launch/dryrun.py``; this module
+only parses compiled SPMD module text.
+
+Two outputs from one parse (methodology in EXPERIMENTS.md §Roofline):
+
+  * per-op totals — each collective contributes a ring-model per-device
+    *link-byte* estimate (all-gather F(S-1)/S, all-reduce 2F(S-1)/S,
+    reduce-scatter F(S-1)/S, all-to-all F(S-1)/S, permute F), scaled by the
+    enclosing while-loops' ``known_trip_count``;
+  * the [D, D] device-pair traffic matrix (``traffic=True``) — the same
+    link bytes attributed to ring-neighbor pairs *within each replica
+    group*, which is what ``core.mapping.search_mesh_mapping`` scores
+    against the machine tree (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_RESULT_RE = re.compile(
+    r"=\s*(.*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_IOTA_FULL_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_LIST_FULL_RE = re.compile(r"replica_groups=\{(\{[\d,]+\}(?:,\{[\d,]+\})*)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(\{[\d,]+\}(?:,\{[\d,]+\})*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_WHILE_RE = re.compile(r"condition=%([\w.\-]+), body=%([\w.\-]+)")
+
+
+def _typed_shapes(type_str: str, start: bool = False):
+    """(dtype, dims) pairs of a result type string. On an async ``-start``
+    op the result tuple aliases the operands before the destination
+    buffers — ``(in.., out..)`` — so only the trailing half is counted."""
+    shapes = [s for s in _SHAPE_RE.findall(type_str)
+              if s[0] in _DTYPE_BYTES]
+    if start and len(shapes) > 1:
+        shapes = shapes[len(shapes) // 2:]
+    return shapes
+
+
+def _shape_bytes(type_str: str, start: bool = False) -> int:
+    total = 0
+    for dt, dims in _typed_shapes(type_str, start):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, num_partitions: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return num_partitions
+
+
+def materialize_groups(line: str,
+                       num_partitions: int) -> Optional[np.ndarray]:
+    """[n_groups, group_size] device ids of each replica group, or ``None``
+    when the line carries no group info (callers fall back to one global
+    group). Handles both encodings XLA emits:
+
+      * iota — ``replica_groups=[G,S]<=[d0,d1,..]T(p0,p1,..)``: the device
+        range reshaped to ``dims``, transposed by ``perm``, reshaped [G, S];
+      * explicit list — ``replica_groups={{0,1},{2,3},..}``.
+    """
+    m = _GROUPS_IOTA_FULL_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims)))
+        if int(np.prod(dims)) != g * s:
+            return None                              # pragma: no cover
+        ids = ids.reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(x) for x in m.group(4).split(",")])
+        return ids.reshape(g, s)
+    m = _GROUPS_LIST_FULL_RE.search(line)
+    if m:
+        groups = [[int(x) for x in grp.split(",")]
+                  for grp in re.findall(r"\{([\d,]+)\}", m.group(1))]
+        size = max(len(grp) for grp in groups)
+        if any(len(grp) != size for grp in groups):
+            return None                              # ragged: caller skips
+        return np.asarray(groups, dtype=np.int64)
+    m = _PAIRS_RE.search(line)
+    if m:  # collective-permute: each source->target pair is its own "group"
+        pairs = [[int(x) for x in grp.split(",")]
+                 for grp in re.findall(r"\{([\d,]+)\}", m.group(1))]
+        return np.asarray(pairs, dtype=np.int64)
+    return None
+
+
+def _link_bytes(op: str, result_bytes: int, s: int) -> Tuple[float, float]:
+    """(per-device ring link bytes, operand bytes) per the module docstring."""
+    f = float(result_bytes)
+    if op == "all-gather":
+        return f * (s - 1) / s, f / s
+    if op == "all-reduce":
+        return 2.0 * f * (s - 1) / s, f
+    if op == "reduce-scatter":
+        full = f * s
+        return full * (s - 1) / s, full
+    if op == "all-to-all":
+        return f * (s - 1) / s, f
+    return f, f                                   # collective-permute
+
+
+def add_group_traffic(T: np.ndarray, groups: np.ndarray,
+                      link_bytes: float) -> None:
+    """Attribute one collective's per-device link bytes to ring-neighbor
+    device pairs within each replica group (in-place on ``T``).
+
+    Mirrors ``core.mapping.collective_traffic_matrix`` exactly (same ring
+    roll, so an iota group along one mesh axis reproduces the per-axis
+    model bit-for-bit): a device moving ``link_bytes`` within a size-S
+    group charges ``link_bytes / (S - 1)`` to each of its ring neighbors,
+    symmetric. Size-2 groups (and permute source->target pairs) therefore
+    land twice on their single physical pair — the forward and backward
+    ring links coincide.
+    """
+    s = groups.shape[1]
+    if s <= 1 or link_bytes <= 0:
+        return
+    per_pair = link_bytes / (s - 1)
+    a = groups
+    b = np.roll(groups, -1, axis=1)
+    np.add.at(T, (a.ravel(), b.ravel()), per_pair)
+    np.add.at(T, (b.ravel(), a.ravel()), per_pair)
+
+
+def parse_collectives(hlo: str, num_partitions: int,
+                      fallback_trips: List[int],
+                      traffic: bool = False) -> Dict[str, Any]:
+    """Trip-scaled per-device collective byte totals by op type.
+
+    ``link_bf16`` additionally halves f32 collectives: XLA:CPU upcasts
+    every bf16 GEMM operand chain to f32 and hoists all-gathers past the
+    converts, so f32 collectives in this HLO are 2x the traffic the TPU
+    target moves. Genuinely-f32 tensors (optimizer second moments, softmax
+    statistics) are a small minority of collective payloads (methodology
+    note in EXPERIMENTS.md §Roofline).
+
+    With ``traffic=True`` the result also carries ``"traffic"``: the
+    [num_partitions, num_partitions] bf16-corrected device-pair link-byte
+    matrix (see :func:`add_group_traffic`).
+    """
+    comps: Dict[str, Dict] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    group_cache: Dict[str, Optional[np.ndarray]] = {}
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        m = _HEADER_RE.match(s)
+        if m and s.endswith("{"):
+            cur = m.group(2)
+            comps[cur] = {"coll": [], "whiles": []}
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        rm = _RESULT_RE.search(s)
+        if rm:
+            op = rm.group(2)
+            result = rm.group(1)
+            if rm.group(3) == "-done":
+                continue   # the matching -start line already counted it
+            is_start = rm.group(3) == "-start"
+            rb = _shape_bytes(result, start=is_start)
+            rb32 = sum(
+                (int(np.prod([int(d) for d in dims.split(",")] or [1]))
+                 if dims else 1) * 4
+                for dt, dims in _typed_shapes(result, is_start)
+                if dt == "f32")
+            gs = _group_size(s, num_partitions)
+            link, operand = _link_bytes(op, rb, gs)
+            link32, _ = _link_bytes(op, rb32, gs)
+            gkey = None
+            if traffic:
+                gm = (_GROUPS_IOTA_FULL_RE.search(s)
+                      or _GROUPS_LIST_FULL_RE.search(s) or _PAIRS_RE.search(s))
+                gkey = gm.group(0) if gm else ""
+                if gkey not in group_cache:
+                    group_cache[gkey] = materialize_groups(gkey,
+                                                           num_partitions)
+            comps[cur]["coll"].append((op, link, operand, link32, gkey))
+        wm = _WHILE_RE.search(s)
+        if wm:
+            tm = _TRIP_RE.search(s)
+            trip = int(tm.group(1)) if tm else 0
+            comps[cur]["whiles"].append((wm.group(2), trip))
+
+    out: Dict[str, Any] = {"link": {}, "operand": {}, "link_bf16": {},
+                           "count": 0}
+    if traffic:
+        out["traffic"] = np.zeros((num_partitions, num_partitions))
+    if entry is None:
+        return out
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float, depth: int = 0):
+        if depth > 10 or name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for body, trip in comps[name]["whiles"]:
+            if trip <= 0:
+                trip = max(fallback_trips) if fallback_trips else 1
+            visit(body, m * trip, depth + 1)
+
+    visit(entry, 1.0)
+    link: Dict[str, float] = {}
+    operand: Dict[str, float] = {}
+    link_bf16: Dict[str, float] = {}
+    count = 0
+    for name, m in mult.items():
+        for op, lb, ob, lb32, gkey in comps[name]["coll"]:
+            link[op] = link.get(op, 0.0) + m * lb
+            operand[op] = operand.get(op, 0.0) + m * ob
+            link_bf16[op] = link_bf16.get(op, 0.0) + m * (lb - 0.5 * lb32)
+            count += 1
+            if traffic:
+                groups = group_cache.get(gkey)
+                if groups is None:
+                    groups = np.arange(num_partitions).reshape(1, -1)
+                add_group_traffic(out["traffic"], groups,
+                                  m * (lb - 0.5 * lb32))
+    out.update(link=link, operand=operand, link_bf16=link_bf16, count=count)
+    return out

@@ -3,15 +3,23 @@
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
-        --shape train_4k [--multi-pod] [--out results/dryrun]
+        --shape train_4k [--multi-pod] [--out results/dryrun] \
+        [--profile 2d|fsdp|sp|expert] [--topology-aware]
     PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --mapping-grid
 
 Methodology (EXPERIMENTS.md §Roofline records the same):
-  * collective bytes — parsed from the compiled SPMD module text; each
-    collective contributes a ring-model per-device *link-byte* estimate
-    (all-gather F(S-1)/S, all-reduce 2F(S-1)/S, reduce-scatter F(S-1)/S,
-    all-to-all F(S-1)/S, permute F), scaled by the enclosing while-loops'
-    ``known_trip_count``. Raw operand sums are reported alongside.
+  * collective bytes — parsed from the compiled SPMD module text by
+    ``repro.launch.collectives``; each collective contributes a ring-model
+    per-device *link-byte* estimate (all-gather F(S-1)/S, all-reduce
+    2F(S-1)/S, reduce-scatter F(S-1)/S, all-to-all F(S-1)/S, permute F),
+    scaled by the enclosing while-loops' ``known_trip_count``. Raw operand
+    sums are reported alongside.
+  * mapping search (``--topology-aware`` / ``--mapping-grid``) — the same
+    parse also attributes link bytes to device pairs inside each replica
+    group; ``core.mapping.search_mesh_mapping`` then scores logical ->
+    physical assignments against the TPU-pod tree and the report compares
+    the searched mapping with identity (DESIGN.md §6).
   * FLOPs / bytes — XLA's cost_analysis counts while bodies ONCE, so the
     per-device totals come from ``repro.launch.hlo_cost``: a text-level
     HLO cost model that multiplies every computation by its actual
@@ -29,7 +37,6 @@ os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
 
 import argparse            # noqa: E402
 import json                # noqa: E402
-import re                  # noqa: E402
 import time                # noqa: E402
 import traceback           # noqa: E402
 from typing import Any, Dict, List, Optional, Tuple  # noqa: E402
@@ -38,145 +45,57 @@ import jax                 # noqa: E402
 import numpy as np         # noqa: E402
 
 from repro import configs                  # noqa: E402
+from repro.core import mapping, topology   # noqa: E402
 from repro.dist.sharding import tree_shardings  # noqa: E402
 from repro.launch import hlo_cost          # noqa: E402
 from repro.launch import mesh as mesh_lib  # noqa: E402
+# HLO collective accounting lives in launch/collectives.py (import-safe
+# without the XLA_FLAGS override); re-exported here for existing callers
+# (scripts/diag_cell.py, tests) that historically imported from the dry-run.
+from repro.launch.collectives import (_group_size, _link_bytes,  # noqa: F401,E402
+                                      _shape_bytes, materialize_groups,
+                                      parse_collectives)
 from repro.launch.steps import build_cell, rules_for  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
-# HLO collective accounting
+# Topology-aware mapping report
 # ---------------------------------------------------------------------------
 
-_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
-                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-                "f64": 8, "c64": 8, "c128": 16}
+def mapping_report(traffic: np.ndarray,
+                   mesh_shape: Tuple[int, ...]) -> Dict[str, Any]:
+    """Identity vs searched logical->physical mapping over the machine tree.
 
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_RESULT_RE = re.compile(
-    r"=\s*(.*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|"
-    r"collective-permute)(?:-start|-done)?\(")
-_HEADER_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
-_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
-_WHILE_RE = re.compile(r"condition=%([\w.\-]+), body=%([\w.\-]+)")
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _group_size(line: str, num_partitions: int) -> int:
-    m = _GROUPS_IOTA_RE.search(line)
-    if m:
-        return max(int(m.group(2)), 1)
-    m = _GROUPS_LIST_RE.search(line)
-    if m:
-        return max(len(m.group(1).split(",")), 1)
-    return num_partitions
-
-
-def _link_bytes(op: str, result_bytes: int, s: int) -> Tuple[float, float]:
-    """(per-device ring link bytes, operand bytes) per the docstring."""
-    f = float(result_bytes)
-    if op == "all-gather":
-        return f * (s - 1) / s, f / s
-    if op == "all-reduce":
-        return 2.0 * f * (s - 1) / s, f
-    if op == "reduce-scatter":
-        full = f * s
-        return full * (s - 1) / s, full
-    if op == "all-to-all":
-        return f * (s - 1) / s, f
-    return f, f                                   # collective-permute
-
-
-def parse_collectives(hlo: str, num_partitions: int,
-                      fallback_trips: List[int]) -> Dict[str, Any]:
-    """Trip-scaled per-device collective byte totals by op type.
-
-    ``link_bf16`` additionally halves f32 collectives: XLA:CPU upcasts
-    every bf16 GEMM operand chain to f32 and hoists all-gathers past the
-    converts, so f32 collectives in this HLO are 2x the traffic the TPU
-    target moves. Genuinely-f32 tensors (optimizer second moments, softmax
-    statistics) are a small minority of collective payloads (methodology
-    note in EXPERIMENTS.md §Roofline).
+    ``traffic`` is the measured [D, D] device-pair link-byte matrix from
+    ``parse_collectives(..., traffic=True)``. Both sides report the paper's
+    makespan (max over links of F_l-weighted bytes — dimensionless relative
+    cost), the bottleneck link's raw bytes, and the bytes crossing the
+    cross-pod DCN links (depth-1 tree links). ``device_order`` is ready for
+    ``mesh_lib.make_mapped_mesh``; searched <= identity always holds
+    because identity is the search's first candidate.
     """
-    comps: Dict[str, Dict] = {}
-    cur: Optional[str] = None
-    entry: Optional[str] = None
-    for raw in hlo.splitlines():
-        s = raw.strip()
-        m = _HEADER_RE.match(s)
-        if m and s.endswith("{"):
-            cur = m.group(2)
-            comps[cur] = {"coll": [], "whiles": []}
-            if m.group(1):
-                entry = cur
-            continue
-        if cur is None:
-            continue
-        if s == "}":
-            cur = None
-            continue
-        rm = _RESULT_RE.search(s)
-        if rm:
-            op = rm.group(2)
-            result = rm.group(1)
-            rb = _shape_bytes(result)
-            rb32 = sum(
-                (int(np.prod([int(d) for d in dims.split(",")] or [1]))
-                 if dims else 1) * 4
-                for dt, dims in _SHAPE_RE.findall(result) if dt == "f32")
-            gs = _group_size(s, num_partitions)
-            link, operand = _link_bytes(op, rb, gs)
-            link32, _ = _link_bytes(op, rb32, gs)
-            comps[cur]["coll"].append((op, link, operand, link32))
-        wm = _WHILE_RE.search(s)
-        if wm:
-            tm = _TRIP_RE.search(s)
-            trip = int(tm.group(1)) if tm else 0
-            comps[cur]["whiles"].append((wm.group(2), trip))
+    topo = topology.mesh_tree(mesh_shape)
+    depths = np.asarray([topo.depth(int(c)) for c in topo.link_nodes])
+    f_l = np.asarray(topo.F_l)
 
-    if entry is None:
-        return {"link": {}, "operand": {}, "link_bf16": {}, "count": 0}
-    mult: Dict[str, float] = {}
+    def side(device_to_bin: np.ndarray) -> Dict[str, float]:
+        loads = mapping.link_loads_of_device_map(traffic, topo,
+                                                 device_to_bin)
+        return {"makespan": float((f_l * loads).max()),
+                "bottleneck_link_bytes": float(loads.max()),
+                "dcn_bytes": float(loads[depths == 1].sum())}
 
-    def visit(name: str, m: float, depth: int = 0):
-        if depth > 10 or name not in comps:
-            return
-        mult[name] = mult.get(name, 0.0) + m
-        for body, trip in comps[name]["whiles"]:
-            if trip <= 0:
-                trip = max(fallback_trips) if fallback_trips else 1
-            visit(body, m * trip, depth + 1)
-
-    visit(entry, 1.0)
-    link: Dict[str, float] = {}
-    operand: Dict[str, float] = {}
-    link_bf16: Dict[str, float] = {}
-    count = 0
-    for name, m in mult.items():
-        for op, lb, ob, lb32 in comps[name]["coll"]:
-            link[op] = link.get(op, 0.0) + m * lb
-            operand[op] = operand.get(op, 0.0) + m * ob
-            link_bf16[op] = link_bf16.get(op, 0.0) + m * (lb - 0.5 * lb32)
-            count += 1
-    return {"link": link, "operand": operand, "link_bf16": link_bf16,
-            "count": count}
+    d = traffic.shape[0]
+    best = mapping.search_mesh_mapping(mesh_shape, {}, topo, traffic=traffic)
+    identity = side(np.arange(d))
+    searched = side(best.device_to_bin)
+    return {"identity": identity, "searched": searched,
+            "axis_perm": list(best.axis_perm),
+            "axis_orders": list(best.axis_orders),
+            "makespan_ratio": (searched["makespan"] / identity["makespan"]
+                               if identity["makespan"] > 0 else 1.0),
+            "total_link_bytes": float(traffic.sum() / 2.0),
+            "device_order": best.device_to_bin.tolist()}
 
 
 # ---------------------------------------------------------------------------
@@ -242,12 +161,24 @@ def attention_kernel_bytes(arch, shape) -> float:
 def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
              out_dir: Optional[str] = None, grad_compress: bool = False,
              tag: str = "", profile: str = "2d",
-             overrides: Optional[Dict] = None) -> Dict:
+             overrides: Optional[Dict] = None,
+             topology_aware: bool = False) -> Dict:
+    """One (arch x shape x mesh) cell: compile once, extract roofline terms.
+
+    ``topology_aware=True`` additionally closes the partitioner loop
+    (DESIGN.md §6): the compiled module's per-collective replica groups
+    become a device-pair traffic matrix, ``core.mapping.search_mesh_mapping``
+    scores logical->physical candidates over the machine tree, and the
+    result carries a searched-vs-identity comparison plus the device order
+    ``mesh_lib.make_mapped_mesh`` would build the production mesh with —
+    all from the single compile (the mapping permutes physical devices
+    under an unchanged SPMD program).
+    """
     arch = configs.get(arch_name)
     shape = arch.shapes[shape_name]
     mesh_tag = "2x16x16" if multi_pod else "16x16"
     result: Dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_tag,
-                    "kind": shape.kind, "tag": tag}
+                    "kind": shape.kind, "tag": tag, "profile": profile}
     if shape.kind == "skip":
         result["status"] = "skip"
         result["reason"] = shape.skip_reason
@@ -265,7 +196,13 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
                               grad_compress, profile=profile)
     t_compile = time.time() - t0
     hlo = compiled.as_text()
-    coll = parse_collectives(hlo, chips, cell["scan_lengths"])
+    coll = parse_collectives(hlo, chips, cell["scan_lengths"],
+                             traffic=topology_aware)
+    if topology_aware:
+        t0 = time.time()
+        result["mapping"] = mapping_report(coll["traffic"],
+                                           mesh.devices.shape)
+        result["mapping"]["search_s"] = round(time.time() - t0, 2)
     try:
         mem = compiled.memory_analysis()
         mem_info = {
@@ -365,6 +302,48 @@ def _emit(result: Dict, out_dir: Optional[str]) -> Dict:
     return result
 
 
+def _print_mapping(arch_name: str, shape_name: str, profile: str,
+                   rep: Dict) -> None:
+    ident, srch = rep["identity"], rep["searched"]
+    print(f"[MAP]  {arch_name}/{shape_name}/{profile} "
+          f"makespan id={ident['makespan']:.3e} "
+          f"searched={srch['makespan']:.3e} "
+          f"(ratio {rep['makespan_ratio']:.3f}) "
+          f"dcn_bytes id={ident['dcn_bytes']:.3e} "
+          f"searched={srch['dcn_bytes']:.3e} "
+          f"perm={tuple(rep['axis_perm'])}", flush=True)
+
+
+def mapping_grid(arch_names: List[str], shape_name: str, out_dir: str,
+                 overrides: Optional[Dict] = None) -> int:
+    """Searched-vs-identity mapping comparison over each arch's sharding
+    profiles on the multi-pod mesh (the ROADMAP 'drive mesh-axis ordering
+    from the paper's partitioner' deliverable). Returns the failure count.
+    """
+    failures = 0
+    for arch_name in arch_names:
+        arch = configs.get(arch_name)
+        for profile in arch.profiles:
+            try:
+                r = run_cell(arch_name, shape_name, multi_pod=True,
+                             out_dir=out_dir, tag=f"map_{profile}",
+                             profile=profile, overrides=overrides,
+                             topology_aware=True)
+                if r["status"] != "ok":
+                    print(f"[SKIP] {arch_name}/{shape_name}/{profile}: "
+                          f"{r.get('reason', '')[:60]}", flush=True)
+                    continue
+                _print_mapping(arch_name, shape_name, profile, r["mapping"])
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {arch_name}/{shape_name}/{profile}: {e}",
+                      flush=True)
+                traceback.print_exc()
+            finally:
+                jax.clear_caches()
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -375,8 +354,15 @@ def main() -> None:
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     ap.add_argument("--profile", default="2d",
-                    help="lm sharding profile: 2d | fsdp | sp")
+                    help="lm sharding profile: 2d | fsdp | sp | expert")
     ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--topology-aware", action="store_true",
+                    help="search the logical->physical device mapping over "
+                         "the machine tree and report searched vs identity")
+    ap.add_argument("--mapping-grid", action="store_true",
+                    help="multi-pod searched-vs-identity comparison for "
+                         "every sharding profile of the given --arch "
+                         "(default: qwen2-1.5b + deepseek-v2-lite-16b)")
     ap.add_argument("--override", action="append", default=[],
                     help="cfg override key=value (int), e.g. ep_shard_map=1")
     args = ap.parse_args()
@@ -384,6 +370,15 @@ def main() -> None:
     for kv in args.override:
         k, v = kv.split("=")
         overrides[k] = int(v)
+
+    if args.mapping_grid:
+        archs = [args.arch] if args.arch else ["qwen2-1.5b",
+                                               "deepseek-v2-lite-16b"]
+        failures = mapping_grid(archs, args.shape or "train_4k", args.out,
+                                overrides)
+        if failures:
+            raise SystemExit(f"{failures} mapping-grid cells failed")
+        return
 
     meshes = []
     if args.single_pod or not args.multi_pod:
@@ -409,7 +404,8 @@ def main() -> None:
             try:
                 r = run_cell(arch_name, shape_name, mp, args.out,
                              grad_compress=args.grad_compress, tag=args.tag,
-                             profile=args.profile, overrides=overrides)
+                             profile=args.profile, overrides=overrides,
+                             topology_aware=args.topology_aware)
                 if r["status"] == "skip":
                     print(f"[SKIP] {arch_name}/{shape_name}/{mesh_tag}: "
                           f"{r['reason'][:60]}", flush=True)
@@ -423,6 +419,9 @@ def main() -> None:
                           f"dom={r['dominant']} "
                           f"roofline={r['roofline_fraction']:.2f}",
                           flush=True)
+                    if "mapping" in r:
+                        _print_mapping(arch_name, shape_name, args.profile,
+                                       r["mapping"])
             except Exception as e:
                 failures += 1
                 print(f"[FAIL] {arch_name}/{shape_name}/{mesh_tag}: {e}",

@@ -3,18 +3,66 @@
 A FUNCTION, not a module-level constant — importing this module never
 touches jax device state. The dry-run sets XLA_FLAGS for 512 host devices
 BEFORE importing jax; everything else sees the real device count.
+
+``make_mapped_mesh`` is the partitioner's hook into mesh construction:
+``device_order`` is a ``core.mapping.MeshMapping.device_to_bin`` array
+(logical device i -> physical leaf/device index), so the makespan search
+over the machine tree decides which physical chip backs each logical mesh
+coordinate instead of a fixed axis table. ``device_order=None`` is the
+identity mapping the fixed tables used to hardcode.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+def make_mapped_mesh(mesh_shape: Sequence[int], axes: Sequence[str],
+                     device_order: Optional[np.ndarray] = None,
+                     devices: Optional[Sequence] = None):
+    """Mesh over ``devices`` (default: all) with an explicit logical ->
+    physical assignment: logical device ``i`` (row-major index into
+    ``mesh_shape``) is backed by physical device ``device_order[i]``.
+    """
+    devs = np.asarray(devices if devices is not None else jax.devices(),
+                      dtype=object)
+    shape = tuple(mesh_shape)
+    n = int(np.prod(shape))
+    if devs.size < n:
+        raise ValueError(f"mesh shape {shape} needs {n} devices, "
+                         f"got {devs.size}")
+    devs = devs[:n]           # jax.make_mesh semantics: first n devices
+    if device_order is not None:
+        order = np.asarray(device_order)
+        if sorted(order.tolist()) != list(range(n)):
+            raise ValueError("device_order must be a permutation of "
+                             f"range({n})")
+        devs = devs[order]
+    return jax.sharding.Mesh(devs.reshape(shape), tuple(axes))
+
+
+def device_order_of(mesh) -> np.ndarray:
+    """Inverse of ``make_mapped_mesh``: the physical index (position in
+    ``jax.devices()``) backing each logical device, row-major."""
+    ids = {d: i for i, d in enumerate(jax.devices())}
+    return np.asarray([ids[d] for d in mesh.devices.ravel()])
+
+
+def production_mesh_spec(multi_pod: bool = False
+                         ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """(shape, axis names) of the production mesh — importable without jax
+    device init (the dry-run sizes its grid from this)."""
+    if multi_pod:
+        return (2, 16, 16), ("pod", "data", "model")
+    return (16, 16), ("data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         device_order: Optional[np.ndarray] = None):
+    shape, axes = production_mesh_spec(multi_pod)
+    return make_mapped_mesh(shape, axes, device_order)
 
 
 def make_smoke_mesh():
@@ -23,7 +71,7 @@ def make_smoke_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
-# Hardware constants (TPU v5e-class; fixed by the assignment)
+# Hardware constants (TPU v5e-class machine model, DESIGN.md §6)
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link

@@ -52,6 +52,23 @@ def opt_config(total_steps: int = 1000) -> adamw.AdamWConfig:
 # Per-(family, kind) builders
 # ---------------------------------------------------------------------------
 
+def _with_compress_state(ret: Dict[str, Any], params_sds, pspec,
+                         grad_compress: bool) -> Dict[str, Any]:
+    """Insert the error-feedback residual as the step's third argument
+    (make_train_step's grad_compress signature): SDS tree mirrors params
+    (f32 float leaves), sharded like the gradients it corrects."""
+    if not grad_compress:
+        return ret
+    from repro.dist import compress
+    cstate_sds = jax.eval_shape(compress.init_state, params_sds)
+    ret["args_sds"] = ret["args_sds"][:2] + (cstate_sds,) \
+        + ret["args_sds"][2:]
+    ret["args_specs"] = ret["args_specs"][:2] + (pspec,) \
+        + ret["args_specs"][2:]
+    ret["donate"] = (0, 1, 2)
+    return ret
+
+
 def build_cell(arch: cc.ArchDef, shape: cc.ShapeSpec, rules: Rules,
                grad_compress: bool = False,
                overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
@@ -64,6 +81,10 @@ def build_cell(arch: cc.ArchDef, shape: cc.ShapeSpec, rules: Rules,
 
     ``overrides`` (dry-run calibration): n_layers / q_chunk / kv_chunk /
     edge_chunk override the model config; ``arcs`` overrides the shape meta.
+
+    ``grad_compress`` steps take (params, opt_state, compress_state, batch)
+    — the residual rides as an explicit argument so the dry-run lowers the
+    same signature the checkpointed train loop drives.
     """
     if shape.kind == "skip":
         raise ValueError(f"{arch.name}/{shape.name} is skipped: "
@@ -98,9 +119,11 @@ def build_cell(arch: cc.ArchDef, shape: cc.ShapeSpec, rules: Rules,
             b_sds, b_logical = cc.lm_train_inputs(**shape.meta)
             b_spec = cc.logical_to_specs(b_logical, rules)
             scan_lengths = [cfg.n_layers]
-            return dict(step=step, args_sds=(params_sds, opt_sds, b_sds),
-                        args_specs=(pspec, ospec, b_spec), donate=(0, 1),
-                        scan_lengths=scan_lengths)
+            return _with_compress_state(
+                dict(step=step, args_sds=(params_sds, opt_sds, b_sds),
+                     args_specs=(pspec, ospec, b_spec), donate=(0, 1),
+                     scan_lengths=scan_lengths),
+                params_sds, pspec, grad_compress)
         if shape.kind == "prefill":
             step = functools.partial(tr.prefill, cfg=cfg, rules=rules)
             b_sds, b_logical = cc.lm_prefill_inputs(**shape.meta)
@@ -150,10 +173,12 @@ def build_cell(arch: cc.ArchDef, shape: cc.ShapeSpec, rules: Rules,
         scan_lengths = [cfg.n_layers]
         if chunk:
             scan_lengths.append((meta["arcs"] + chunk - 1) // chunk)
-        return dict(step=step, args_sds=(params_sds, opt_sds, b_sds),
-                    args_specs=(pspec, ospec,
-                                cc.logical_to_specs(b_logical, rules)),
-                    donate=(0, 1), scan_lengths=scan_lengths)
+        return _with_compress_state(
+            dict(step=step, args_sds=(params_sds, opt_sds, b_sds),
+                 args_specs=(pspec, ospec,
+                             cc.logical_to_specs(b_logical, rules)),
+                 donate=(0, 1), scan_lengths=scan_lengths),
+            params_sds, pspec, grad_compress)
 
     if arch.family == "recsys":
         from repro.models import recsys as rs
@@ -170,10 +195,12 @@ def build_cell(arch: cc.ArchDef, shape: cc.ShapeSpec, rules: Rules,
                                    grad_specs=pspec)
             b_sds, b_logical = cc.recsys_train_inputs(
                 shape.meta["batch"], cfg.hist_len, cfg.d_dense)
-            return dict(step=step, args_sds=(params_sds, opt_sds, b_sds),
-                        args_specs=(pspec, ospec,
-                                    cc.logical_to_specs(b_logical, rules)),
-                        donate=(0, 1), scan_lengths=[])
+            return _with_compress_state(
+                dict(step=step, args_sds=(params_sds, opt_sds, b_sds),
+                     args_specs=(pspec, ospec,
+                                 cc.logical_to_specs(b_logical, rules)),
+                     donate=(0, 1), scan_lengths=[]),
+                params_sds, pspec, grad_compress)
         if shape.kind == "score":
             step = functools.partial(rs.score, cfg=cfg, rules=rules)
             b_sds, b_logical = cc.recsys_train_inputs(

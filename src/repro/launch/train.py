@@ -7,11 +7,24 @@ fault-tolerant loop does checkpoint/restart.
 
 ``--smoke`` runs the reduced config on local devices; without it the full
 config is used (requires real accelerators). ``--profile`` picks the LM
-sharding profile (2d | fsdp | sp) from the §Perf table.
+sharding profile (2d | fsdp | sp | expert) from the DESIGN.md
+§Sharding-profiles table.
+
+``--topology-aware`` closes the partitioner loop at launch (DESIGN.md §6):
+the jitted step is compiled once on the identity mesh, the compiled
+module's collectives become a device-pair traffic matrix, and
+``core.mapping.search_mesh_mapping`` over the machine tree picks the
+logical -> physical device order the final mesh is built with
+(``launch.mesh.make_mapped_mesh``). With one local device this is a no-op.
+
+``--grad-compress`` routes gradients through the int8 error-feedback round
+trip; the residual state is owned by the train loop (threaded per step,
+checkpointed, restored on resume).
 """
 from __future__ import annotations
 
 import argparse
+import itertools
 import time
 
 import jax
@@ -20,6 +33,7 @@ import numpy as np
 
 from repro import configs
 from repro.data import pipeline
+from repro.launch import mesh as mesh_lib
 from repro.launch.steps import rules_for
 from repro.optim import adamw
 from repro.train import loop
@@ -42,6 +56,30 @@ def make_batches(arch, cfg, batch: int, seq: int):
         yield {k: jnp.asarray(v) for k, v in b.items()}
 
 
+def searched_mesh(step, step_args, mesh, scan_lengths):
+    """Compile once on ``mesh``, search the logical->physical mapping over
+    the guessed machine tree, and return (mapped mesh, report dict)."""
+    from repro.core import mapping, topology
+    from repro.launch.collectives import parse_collectives
+    n_dev = int(np.prod(mesh.devices.shape))
+    with mesh:
+        compiled = jax.jit(step).lower(*step_args).compile()
+    coll = parse_collectives(compiled.as_text(), n_dev, scan_lengths,
+                             traffic=True)
+    del compiled
+    jax.clear_caches()
+    topo = topology.guess_tree(n_dev)
+    best = mapping.search_mesh_mapping(mesh.devices.shape, {}, topo,
+                                       traffic=coll["traffic"])
+    identity = mapping.makespan_of_device_map(coll["traffic"], topo,
+                                              np.arange(n_dev))
+    mapped = mesh_lib.make_mapped_mesh(mesh.devices.shape, mesh.axis_names,
+                                       best.device_to_bin)
+    return mapped, {"identity_makespan": identity,
+                    "searched_makespan": best.bottleneck,
+                    "device_order": best.device_to_bin.tolist()}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -54,6 +92,7 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--profile", default="2d")
     ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--topology-aware", action="store_true")
     args = ap.parse_args()
 
     arch = configs.get(args.arch)
@@ -83,13 +122,27 @@ def main() -> None:
         lambda p, b: mdl.loss_fn(p, b, cfg, rules), ocfg,
         grad_compress=args.grad_compress))
 
+    batches = make_batches(arch, cfg, args.batch, args.seq)
+    if args.topology_aware and n_dev > 1:
+        batch0 = next(batches)
+        batches = itertools.chain([batch0], batches)
+        if args.grad_compress:
+            from repro.dist import compress
+            probe_args = (params, opt, compress.init_state(params), batch0)
+        else:
+            probe_args = (params, opt, batch0)
+        scan_lengths = [getattr(cfg, "n_layers", 1)]
+        mesh, rep = searched_mesh(step, probe_args, mesh, scan_lengths)
+        print(f"topology-aware mapping: identity makespan "
+              f"{rep['identity_makespan']:.3e} -> searched "
+              f"{rep['searched_makespan']:.3e}")
+
     lcfg = loop.LoopConfig(total_steps=args.steps,
                            ckpt_every=args.ckpt_every,
-                           ckpt_dir=args.ckpt_dir)
+                           ckpt_dir=args.ckpt_dir,
+                           grad_compress=args.grad_compress)
     with mesh:
-        params, opt, result = loop.run(
-            step, params, opt, make_batches(arch, cfg, args.batch,
-                                            args.seq), lcfg)
+        params, opt, result = loop.run(step, params, opt, batches, lcfg)
     print(f"steps={result.steps_run} resumed_from={result.resumed_from} "
           f"loss {result.losses[0]:.4f} -> {result.losses[-1]:.4f} "
           f"({result.seconds:.1f}s, stragglers={result.straggler_steps})")

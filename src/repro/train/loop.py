@@ -8,6 +8,10 @@ Failure model exercised by tests and the end-to-end example:
     than ``straggler_factor`` x the EWMA are counted and surfaced (on real
     multi-host runs this signal gates the skip-slowest-k accumulation);
   * checkpoints are pruned to a budget so long runs don't fill disk.
+
+With ``LoopConfig.grad_compress`` the int8 error-feedback residual
+(``repro.dist.compress``) is part of the loop state: threaded through the
+step, saved in every checkpoint, restored on resume.
 """
 from __future__ import annotations
 
@@ -30,6 +34,12 @@ class LoopConfig:
     log_every: int = 10
     straggler_factor: float = 3.0
     fail_at_step: Optional[int] = None     # fault-injection (tests)
+    # int8 error-feedback gradient compression (repro.dist.compress): the
+    # step_fn must come from make_train_step(grad_compress=True); the loop
+    # owns the residual state — initialized once, threaded through every
+    # step, checkpointed/restored next to params and opt_state, so error
+    # feedback survives restarts instead of resetting to zero.
+    grad_compress: bool = False
 
 
 @dataclasses.dataclass
@@ -50,15 +60,37 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
         step_offset: int = 0) -> tuple:
     """Returns (params, opt_state, LoopResult)."""
     saver = ckpt.AsyncSaver()
+    cstate = None
+    if cfg.grad_compress:
+        from repro.dist import compress
+        cstate = compress.init_state(params)
     resumed_from = None
     start = step_offset
+
+    def state_tuple():
+        return ((params, opt_state, cstate) if cfg.grad_compress
+                else (params, opt_state))
+
     if cfg.ckpt_dir:
         latest = ckpt.latest_step(cfg.ckpt_dir)
         if latest is not None:
-            (params, opt_state), _ = ckpt.restore(
-                cfg.ckpt_dir, (params, opt_state), latest)
-            params = jax.tree.map(jax.numpy.asarray, params)
-            opt_state = jax.tree.map(jax.numpy.asarray, opt_state)
+            try:
+                restored, _ = ckpt.restore(cfg.ckpt_dir, state_tuple(),
+                                           latest)
+            except ValueError:
+                if not cfg.grad_compress:
+                    raise
+                # checkpoint predates grad_compress (no residual leaves):
+                # restore (params, opt_state) and restart error feedback
+                # from a zero residual
+                restored, _ = ckpt.restore(cfg.ckpt_dir,
+                                           (params, opt_state), latest)
+                restored = restored + (cstate,)
+            restored = jax.tree.map(jax.numpy.asarray, restored)
+            if cfg.grad_compress:
+                params, opt_state, cstate = restored
+            else:
+                params, opt_state = restored
             start = latest
             resumed_from = latest
 
@@ -73,7 +105,12 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
                 raise InjectedFailure(f"injected failure at step {step}")
             batch = next(batches)
             t0 = time.time()
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if cfg.grad_compress:
+                params, opt_state, cstate, metrics = step_fn(
+                    params, opt_state, cstate, batch)
+            else:
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch)
             loss = float(metrics["loss"])
             dt = time.time() - t0
             ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
@@ -81,12 +118,12 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
                 stragglers += 1
             losses.append(loss)
             if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
-                saver.save(cfg.ckpt_dir, step + 1, (params, opt_state))
+                saver.save(cfg.ckpt_dir, step + 1, state_tuple())
                 ckpt.prune(cfg.ckpt_dir, cfg.keep_ckpts)
     finally:
         saver.join()
     if cfg.ckpt_dir:
-        ckpt.save(cfg.ckpt_dir, cfg.total_steps, (params, opt_state))
+        ckpt.save(cfg.ckpt_dir, cfg.total_steps, state_tuple())
         ckpt.prune(cfg.ckpt_dir, cfg.keep_ckpts)
     return params, opt_state, LoopResult(
         losses=losses, steps_run=len(losses), resumed_from=resumed_from,
