@@ -1,0 +1,125 @@
+"""Looped vs batched candidate scoring for the mesh-mapping search.
+
+The PR 2 search evaluated candidates one at a time — one jitted
+``makespan_tree`` call and one host<->device roundtrip per candidate. The
+batched scorer (``core.mapping.score_device_maps``) buckets all candidates'
+traffic pairs with one flat ``segment_sum`` and collapses to link loads with
+two GEMMs against the subtree indicators — one dispatch per chunk
+(DESIGN.md §6 "Batched search").
+
+Emits one row per mesh shape and writes ``BENCH_mapping_search.json``
+(tracked as a CI artifact) with the speedup table; the two scorers are
+cross-checked per candidate, and a best-of-S ``partition(seeds=S)`` row
+records the vmapped-restart cost amortization.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, tiny
+from repro.core import mapping
+from repro.core.topology import mesh_tree
+
+# full tier ends at the 512-device cells: the qwen2 (2, 16, 16) production
+# mesh and the (8, 8, 8) cube of the acceptance gate
+SHAPES = tiny([(4, 4), (2, 16), (4, 4, 4), (2, 16, 16), (8, 8, 8)],
+              [(2, 4), (2, 2, 4)])
+SEEDS = tiny(4, 2)
+
+
+def _traffic(shape) -> np.ndarray:
+    """Ring-model traffic with per-axis bytes spanning 3 decades (the
+    realistic regime: one hot collective axis, cold neighbors)."""
+    axis_bytes = {a: 10.0 ** (3 - a) for a in range(len(shape))}
+    return mapping.collective_traffic_matrix(shape, axis_bytes)
+
+
+def _score_looped(T, topo, cands) -> np.ndarray:
+    """The historical per-candidate path: edge arrays built once, then one
+    jitted ``makespan_tree`` call + host sync per candidate."""
+    edges = mapping._traffic_edges(T)
+    return np.asarray([
+        float(mapping._device_map_breakdown(T, topo, c, edges).comm_max)
+        for c in cands])
+
+
+def scoring() -> list:
+    rows = []
+    for shape in SHAPES:
+        topo = mesh_tree(shape)
+        T = _traffic(shape)
+        cands, _ = mapping.enumerate_candidates(shape)
+        # warm both compile caches off the clock (same shapes as the
+        # timed runs: the batched path compiles per chunk shape)
+        ctx = mapping._make_scorer_ctx(T, topo)
+        mapping.score_device_maps(T, topo, cands, _ctx=ctx)
+        _score_looped(T, topo, cands[:1])
+
+        t0 = time.time()
+        batched = mapping.score_device_maps(T, topo, cands, _ctx=ctx)
+        t_batch = time.time() - t0
+        t0 = time.time()
+        looped = _score_looped(T, topo, cands)
+        t_loop = time.time() - t0
+        # both f32 paths cancel O(total-traffic)-magnitude terms down to the
+        # link loads, so absolute agreement scales with the traffic scale
+        # (see link_loads_of_device_map's clamp note), not with each load
+        scale = float(np.abs(looped).max())
+        if not np.allclose(batched, looped, rtol=1e-3, atol=1e-4 * scale):
+            raise AssertionError(
+                f"scorer mismatch on {shape}: "
+                f"{np.abs(batched - looped).max()} max abs diff")
+        speedup = t_loop / max(t_batch, 1e-9)
+        name = "x".join(str(s) for s in shape)
+        emit("mapping_search", f"mesh_{name}", t_batch,
+             candidates=int(cands.shape[0]), devices=int(np.prod(shape)),
+             loop_s=round(t_loop, 4), batch_s=round(t_batch, 4),
+             speedup=round(speedup, 1))
+        rows.append({"mesh": name, "devices": int(np.prod(shape)),
+                     "candidates": int(cands.shape[0]),
+                     "loop_s": round(t_loop, 4),
+                     "batch_s": round(t_batch, 4),
+                     "speedup": round(speedup, 2)})
+    return rows
+
+
+def seeded_partition() -> dict:
+    """S vmapped restarts vs S sequential runs of the refinement."""
+    from repro.core.partitioner import PartitionConfig, partition
+    from repro.graph.generators import rmat
+    n, m = tiny((2000, 8000), (300, 1200))
+    g = rmat(n, m, seed=0)
+    topo = mesh_tree(tiny((2, 16), (2, 4)))
+    t0 = time.time()
+    r1 = partition(g, topo, PartitionConfig(seed=0))
+    t_one = time.time() - t0
+    t0 = time.time()
+    rs = partition(g, topo, PartitionConfig(seed=0, seeds=SEEDS))
+    t_s = time.time() - t0
+    emit("mapping_search", f"partition_seeds_{SEEDS}", t_s,
+         m1=round(r1.makespan, 1), mS=round(rs.makespan, 1),
+         one_seed_s=round(t_one, 3), s_seeds_s=round(t_s, 3),
+         cost_ratio=round(t_s / max(t_one, 1e-9), 2))
+    return {"seeds": SEEDS, "makespan_1": r1.makespan,
+            "makespan_S": rs.makespan, "one_seed_s": round(t_one, 3),
+            "s_seeds_s": round(t_s, 3),
+            "cost_ratio": round(t_s / max(t_one, 1e-9), 2)}
+
+
+def run() -> None:
+    rows = scoring()
+    seeds = seeded_partition()
+    out = {"scoring": rows, "partition_seeds": seeds,
+           "tiny": os.environ.get("REPRO_BENCH_TINY", "") == "1"}
+    with open("BENCH_mapping_search.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote BENCH_mapping_search.json "
+          f"(max speedup {max(r['speedup'] for r in rows)}x)")
+
+
+if __name__ == "__main__":
+    run()

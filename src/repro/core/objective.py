@@ -97,6 +97,90 @@ def makespan_routing(part: jnp.ndarray, senders: jnp.ndarray, receivers: jnp.nda
     return makespan_from_parts(comp, comm, F_l)
 
 
+# ---------------------------------------------------------------------------
+# Batched candidate scoring (the mapping search's hot path)
+# ---------------------------------------------------------------------------
+
+def permutation_link_loads(T: jnp.ndarray, subtree: jnp.ndarray,
+                           device_to_bin: jnp.ndarray) -> jnp.ndarray:
+    """comm(l) of ONE device->bin *permutation* from the traffic matrix. [L]
+
+    The mapping case is a relabeling of ``T``: with ``P`` the 0/1 assignment
+    matrix of the permutation, the quotient is ``W = P T P^T``, so
+    ``S W S^T`` collapses onto the gathered indicator
+    ``Sg[l, d] = S[l, bin(d)]`` and every link load is two ``[L, D]`` GEMMs
+    against ``T`` — no ``segment_sum``, no edge-list rebuild. ``T`` is the
+    symmetric per-direction matrix (each undirected pair appears in both
+    entries), matching the arc-based ``quotient_matrix`` convention; the 0.5
+    counts each undirected edge once, as ``link_loads_tree`` does.
+    """
+    S_g = jnp.take(subtree, device_to_bin, axis=1)     # [L, D]
+    rc = S_g @ (T.sum(axis=1) + T.sum(axis=0))         # (S@r + S@c), permuted
+    cross = ((S_g @ T) * S_g).sum(axis=1)              # diag(Sg T Sg^T)
+    return 0.5 * (rc - 2.0 * cross)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_nodes"))
+def permutation_link_loads_batch(device_to_bin: jnp.ndarray,
+                                 pair_u: jnp.ndarray, pair_v: jnp.ndarray,
+                                 pair_w: jnp.ndarray, lca_table: jnp.ndarray,
+                                 subtree: jnp.ndarray,
+                                 node_subtree: jnp.ndarray,
+                                 k: int, n_nodes: int) -> jnp.ndarray:
+    """Link loads ``[C, L]`` for a ``[C, D]`` batch of device->bin
+    permutations, without materializing any quotient matrix.
+
+    Inputs are the *unique* nonzero traffic pairs ``(pair_u, pair_v)`` with
+    weights ``pair_w`` ([E] each), the ``[k, k]`` bin-pair LCA table of the
+    machine tree, and the node-level subtree indicator ``[L, n_nodes]``
+    (``topology.TreeTopology.lca_table`` / ``node_subtree_indicator``).
+
+    Per candidate ``c`` and pair ``e`` with endpoint bins
+    ``(U, V) = (d2b[u_e], d2b[v_e])``, the XOR identity gives
+
+        comm[c, l] = sum_e w_e * (S[l,U] + S[l,V] - 2 * S[l,U] S[l,V])
+
+    and for a tree ``S[l,U] * S[l,V] = S_node[l, lca(U, V)]`` (both leaves
+    sit below link ``l`` iff their LCA does). So all link loads collapse to
+    two bucketings — pair weights by endpoint bin and by LCA node, each one
+    flat ``segment_sum`` over ALL candidates at once — followed by one
+    ``[C, L]`` einsum (two GEMMs) against the subtree indicators. Work is
+    ``O(C * E + C * (k + n_nodes) * L)`` instead of the looped scorer's
+    ``O(C)`` edge rebuilds, segment_sums over ``k^2`` bins and ``L*k*k``
+    einsums — and there is exactly one device dispatch per chunk.
+    """
+    c = device_to_bin.shape[0]
+    e = pair_u.shape[0]
+    U = jnp.take(device_to_bin, pair_u, axis=1)        # [C, E] endpoint bins
+    V = jnp.take(device_to_bin, pair_v, axis=1)
+    row = jnp.arange(c, dtype=jnp.int32)[:, None]
+    # bucket pair weights by endpoint bin: ws[c, i] = sum_e w_e [U=i or V=i]
+    ids = jnp.concatenate([row * k + U, row * k + V], axis=1).reshape(-1)
+    w2 = jnp.broadcast_to(jnp.concatenate([pair_w, pair_w])[None, :],
+                          (c, 2 * e)).reshape(-1)
+    ws = jax.ops.segment_sum(w2, ids, num_segments=c * k).reshape(c, k)
+    # bucket pair weights by LCA node: q[c, n] = sum_e w_e [lca(U,V)=n]
+    lca = lca_table[U, V]                              # [C, E]
+    wq = jnp.broadcast_to(pair_w[None, :], (c, e)).reshape(-1)
+    q = jax.ops.segment_sum(wq, (row * n_nodes + lca).reshape(-1),
+                            num_segments=c * n_nodes).reshape(c, n_nodes)
+    return ws @ subtree.T - 2.0 * (q @ node_subtree.T)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def makespan_tree_batch(parts: jnp.ndarray, senders: jnp.ndarray,
+                        receivers: jnp.ndarray, edge_weight: jnp.ndarray,
+                        node_weight: jnp.ndarray, subtree: jnp.ndarray,
+                        F_l: jnp.ndarray, k: int) -> MakespanBreakdown:
+    """``vmap(makespan_tree)`` over a ``[C, n]`` batch of assignments — the
+    general-graph fallback for candidate sets that are not permutations of
+    the traffic matrix (arbitrary graphs, non-bijective maps)."""
+    def one(p):
+        return makespan_tree(p, senders, receivers, edge_weight, node_weight,
+                             subtree, F_l, k=k)
+    return jax.vmap(one)(parts)
+
+
 def total_cut(W: jnp.ndarray) -> jnp.ndarray:
     """Classic objective: sum of inter-bin edge weights (undirected)."""
     return 0.5 * (W.sum() - jnp.trace(W))

@@ -36,6 +36,7 @@ class PartitionConfig:
     seed: int = 0
     initial: str = "hierarchical"   # or "random"
     final_rounds: Optional[int] = None  # extra rounds on the finest level
+    seeds: int = 1                  # best-of-S vmapped refinement (>= 1)
 
 
 @dataclasses.dataclass
@@ -69,30 +70,53 @@ def _evaluate(g: Graph, topo: TreeTopology, part: np.ndarray) -> PartitionResult
         level_makespans=[])
 
 
+def _initial_parts(coarsest: Graph, topo: TreeTopology,
+                   cfg: PartitionConfig) -> np.ndarray:
+    """[S, n_coarse] initial partitions. Slot 0 is exactly the ``seeds=1``
+    start (same method, same seed); later slots alternate hierarchical
+    growing and balanced random assignments at shifted seeds for
+    diversity."""
+    parts = []
+    for i in range(cfg.seeds):
+        hier = (cfg.initial == "hierarchical") if i == 0 else (i % 2 == 1)
+        if hier:
+            parts.append(initial_partition(coarsest, topo, seed=cfg.seed + i))
+        else:
+            parts.append(random_partition(coarsest.n_nodes, topo.k,
+                                          coarsest.node_weight,
+                                          seed=cfg.seed + i))
+    return np.stack(parts)
+
+
 def partition(g: Graph, topo: TreeTopology,
               cfg: Optional[PartitionConfig] = None) -> PartitionResult:
     cfg = cfg or PartitionConfig()
+    if cfg.seeds < 1:
+        raise ValueError(f"seeds must be >= 1, got {cfg.seeds}")
     t0 = time.time()
     levels = coarsen(g, topo.k, seed=cfg.seed,
                      coarse_factor=cfg.coarse_factor,
                      max_levels=cfg.max_levels)
     coarsest = levels[-1].graph
-    if cfg.initial == "hierarchical":
-        part = initial_partition(coarsest, topo, seed=cfg.seed)
-    else:
-        part = random_partition(coarsest.n_nodes, topo.k,
-                                coarsest.node_weight, seed=cfg.seed)
     history: List[float] = []
-    # uncoarsen: refine at each level, then project to the next finer one
+    # uncoarsen: every level refines all S partitions in ONE vmapped scan
+    # (refine_batch; seeds=1 is the classic single-trajectory V-cycle —
+    # slot 0 is pinned to refine() by test). The refine rounds are
+    # GEMM-bound, so S restarts cost far less than S sequential runs; the
+    # winner is the seed with the smallest true makespan on the finest
+    # graph.
+    parts = _initial_parts(coarsest, topo, cfg)
+    ms = None
     for li in range(len(levels) - 1, -1, -1):
         lg = levels[li].graph
         rcfg = cfg.refine
         if li == 0 and cfg.final_rounds is not None:
             rcfg = dataclasses.replace(rcfg, rounds=cfg.final_rounds)
-        part, m, _ = refine_mod.refine(lg, topo, part, rcfg)
-        history.append(m)
+        parts, ms, _ = refine_mod.refine_batch(lg, topo, parts, rcfg)
+        history.append(float(ms.min()))
         if li > 0:
-            part = part[levels[li - 1].fine_to_coarse]
+            parts = parts[:, levels[li - 1].fine_to_coarse]
+    part = parts[int(np.argmin(ms))]
     res = _evaluate(g, topo, part)
     res.seconds = time.time() - t0
     res.level_makespans = history

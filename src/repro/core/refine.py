@@ -143,12 +143,19 @@ def _sample_candidates(part, senders, receivers, edge_weight, offsets_pad,
     """
     nbr_bin = part[receivers].astype(jnp.int32)
 
-    # heaviest arc per sender: segment argmax via composite value trick
+    # heaviest arc per sender: exact two-pass segment argmax. (A float32
+    # composite key ``w * (m+1) + arc`` loses the packed arc index once the
+    # arc count nears 2^24 — multi-million-edge graphs would sample a wrong,
+    # possibly out-of-segment arc. Two segment_max passes are precision-safe
+    # at any size: first the per-segment max weight, then the largest arc
+    # index among the arcs attaining it.)
     m = senders.shape[0]
-    arc_score = edge_weight.astype(jnp.float32) * jnp.float32(m + 1) + \
-        jnp.arange(m, dtype=jnp.float32)
-    best_score = jax.ops.segment_max(arc_score, senders, num_segments=n)
-    best_arc = jnp.clip((best_score % jnp.float32(m + 1)).astype(jnp.int32), 0, m - 1)
+    w32 = edge_weight.astype(jnp.float32)
+    seg_max = jax.ops.segment_max(w32, senders, num_segments=n)
+    at_max = w32 >= seg_max[senders]          # exact: compares its own max
+    arc_ids = jnp.where(at_max, jnp.arange(m, dtype=jnp.int32), -1)
+    best_arc = jnp.clip(jax.ops.segment_max(arc_ids, senders, num_segments=n),
+                        0, m - 1)
     heavy = nbr_bin[best_arc]
 
     rand_off = (jax.random.uniform(key, (n,)) * jnp.maximum(degrees, 1)).astype(jnp.int32)
@@ -190,17 +197,9 @@ def _sparse_round(part, senders, receivers, edge_weight, node_weight,
 # Driver
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "rounds", "dense", "damping",
-                                             "temp0", "temp_min", "anneal",
-                                             "inflow_slack"))
-def _refine_jit(part0, senders, receivers, edge_weight, node_weight,
-                offsets_pad, degrees, subtree, F_l, key, *, k, rounds, dense,
-                damping, temp0, temp_min, anneal, inflow_slack):
-    def true_makespan(p):
-        br = objective.makespan_tree(p, senders, receivers, edge_weight,
-                                     node_weight, subtree, F_l, k=k)
-        return br.makespan
-
+def _refine_core(part0, senders, receivers, edge_weight, node_weight,
+                 offsets_pad, degrees, subtree, F_l, key, *, k, rounds, dense,
+                 damping, temp0, temp_min, anneal, inflow_slack):
     def body(state: RefineState, ridx):
         key, sub = jax.random.split(state.key)
         if dense:
@@ -213,20 +212,40 @@ def _refine_jit(part0, senders, receivers, edge_weight, node_weight,
                 state.part, senders, receivers, edge_weight, node_weight,
                 offsets_pad, degrees, subtree, F_l, k, state.temp, sub, mode,
                 damping, inflow_slack)
-        m = true_makespan(part)
+        # one breakdown per round: acceptance and stats share it
+        br = objective.makespan_tree(part, senders, receivers, edge_weight,
+                                     node_weight, subtree, F_l, k=k)
+        m = br.makespan
         better = m < state.best_m
         best_part = jnp.where(better, part, state.best_part)
         best_m = jnp.minimum(m, state.best_m)
         temp = jnp.maximum(state.temp * anneal, temp_min)
-        br = objective.makespan_tree(part, senders, receivers, edge_weight,
-                                     node_weight, subtree, F_l, k=k)
         stats = RefineStats(m, br.comp_max, br.comm_max, moved)
         return RefineState(part, best_part, best_m, temp, key), stats
 
-    m0 = true_makespan(part0)
+    m0 = objective.makespan_tree(part0, senders, receivers, edge_weight,
+                                 node_weight, subtree, F_l, k=k).makespan
     init = RefineState(part0, part0, m0, jnp.float32(temp0), key)
     final, stats = jax.lax.scan(body, init, jnp.arange(rounds))
     return final.best_part, final.best_m, stats
+
+
+_STATIC = ("k", "rounds", "dense", "damping", "temp0", "temp_min", "anneal",
+           "inflow_slack")
+_refine_jit = functools.partial(jax.jit, static_argnames=_STATIC)(_refine_core)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def _refine_batch_jit(parts0, senders, receivers, edge_weight, node_weight,
+                      offsets_pad, degrees, subtree, F_l, keys, *, k, rounds,
+                      dense, damping, temp0, temp_min, anneal, inflow_slack):
+    def one(p0, key):
+        return _refine_core(p0, senders, receivers, edge_weight, node_weight,
+                            offsets_pad, degrees, subtree, F_l, key, k=k,
+                            rounds=rounds, dense=dense, damping=damping,
+                            temp0=temp0, temp_min=temp_min, anneal=anneal,
+                            inflow_slack=inflow_slack)
+    return jax.vmap(one)(parts0, keys)
 
 
 def refine(g: Graph, topo: TreeTopology, part: np.ndarray,
@@ -251,3 +270,37 @@ def refine(g: Graph, topo: TreeTopology, part: np.ndarray,
         temp0=cfg.temp0, temp_min=cfg.temp_min, anneal=cfg.anneal,
         inflow_slack=cfg.inflow_slack)
     return np.asarray(best_part), float(best_m), jax.tree.map(np.asarray, stats)
+
+
+def refine_batch(g: Graph, topo: TreeTopology, parts: np.ndarray,
+                 cfg: Optional[RefineConfig] = None
+                 ) -> Tuple[np.ndarray, np.ndarray, RefineStats]:
+    """Refine ``S`` initial partitions at once: the whole ``lax.scan``
+    refinement is vmapped over the seed axis, so the per-round GEMMs batch
+    across seeds and S restarts cost far less than S sequential runs.
+
+    Slot ``i`` draws ``PRNGKey(cfg.seed + i)`` — slot 0 follows the same
+    move trajectory as ``refine(g, topo, parts[0], cfg)``. Returns
+    (best parts ``[S, n]``, best makespans ``[S]``, stats with a leading
+    seed axis).
+    """
+    cfg = cfg or RefineConfig()
+    parts = np.asarray(parts)
+    if parts.ndim != 2:
+        raise ValueError(f"parts must be [S, n], got {parts.shape}")
+    k = topo.k
+    dense = g.n_nodes * k <= cfg.dense_threshold
+    keys = jnp.stack([jax.random.PRNGKey(cfg.seed + i)
+                      for i in range(parts.shape[0])])
+    best_parts, best_ms, stats = _refine_batch_jit(
+        jnp.asarray(parts, dtype=jnp.int32),
+        jnp.asarray(g.senders), jnp.asarray(g.receivers),
+        jnp.asarray(g.edge_weight), jnp.asarray(g.node_weight),
+        jnp.asarray(g.offsets[:-1], dtype=jnp.int32),
+        jnp.asarray(g.degrees(), dtype=jnp.int32),
+        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), keys,
+        k=k, rounds=cfg.rounds, dense=bool(dense), damping=cfg.damping,
+        temp0=cfg.temp0, temp_min=cfg.temp_min, anneal=cfg.anneal,
+        inflow_slack=cfg.inflow_slack)
+    return (np.asarray(best_parts), np.asarray(best_ms),
+            jax.tree.map(np.asarray, stats))

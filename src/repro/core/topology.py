@@ -74,6 +74,38 @@ class TreeTopology:
         cross = S.T @ (f * S)                   # [k, k]
         return u[:, None] + u[None, :] - 2.0 * cross
 
+    def node_subtree_indicator(self) -> np.ndarray:
+        """[n_links, n_nodes] float32: node j lies in the subtree hanging
+        below link l (i.e. below-or-at the link's child node). The node-level
+        analogue of ``subtree``, used by the batched permutation scorer's
+        LCA bucketing (objective.permutation_link_loads_batch)."""
+        A = np.zeros((self.n_links, self.n_nodes), dtype=np.float32)
+        for li, c in enumerate(self.link_nodes):
+            A[li] = _subtree_mask(self.parent, int(c))
+        return A
+
+    def ancestry_matrix(self) -> np.ndarray:
+        """[n_nodes, k] bool: node i is an ancestor-or-self of compute bin j."""
+        A = np.zeros((self.n_nodes, self.k), dtype=bool)
+        for c in range(self.n_nodes):
+            A[c] = _subtree_mask(self.parent, c)[self.compute_bins]
+        return A
+
+    def lca_table(self) -> np.ndarray:
+        """[k, k] int32: node id of the lowest common ancestor of each pair
+        of compute bins. Diagonal holds the bin's own node id."""
+        A = self.ancestry_matrix()
+        depth = np.asarray([self.depth(c) for c in range(self.n_nodes)])
+        out = np.empty((self.k, self.k), dtype=np.int32)
+        for vi in range(self.k):
+            anc = np.nonzero(A[:, vi])[0]        # ancestors-or-self of bin vi
+            order = anc[np.argsort(depth[anc], kind="stable")]
+            common = A[order]                    # [d_v, k] shallow -> deep
+            deepest = (common *
+                       np.arange(1, order.size + 1)[:, None]).argmax(axis=0)
+            out[vi] = order[deepest]
+        return out
+
 
 def _subtree_mask(parent: np.ndarray, node: int) -> np.ndarray:
     n = parent.shape[0]

@@ -62,8 +62,8 @@ from repro.launch.steps import build_cell, rules_for  # noqa: E402
 # Topology-aware mapping report
 # ---------------------------------------------------------------------------
 
-def mapping_report(traffic: np.ndarray,
-                   mesh_shape: Tuple[int, ...]) -> Dict[str, Any]:
+def mapping_report(traffic: np.ndarray, mesh_shape: Tuple[int, ...],
+                   map_restarts: int = 32) -> Dict[str, Any]:
     """Identity vs searched logical->physical mapping over the machine tree.
 
     ``traffic`` is the measured [D, D] device-pair link-byte matrix from
@@ -73,6 +73,11 @@ def mapping_report(traffic: np.ndarray,
     cross-pod DCN links (depth-1 tree links). ``device_order`` is ready for
     ``mesh_lib.make_mapped_mesh``; searched <= identity always holds
     because identity is the search's first candidate.
+
+    The search scores the whole candidate set in one batched jitted
+    evaluation (DESIGN.md §6 "Batched search"), so the widened space —
+    reversed/shifted ring orders, ``map_restarts`` random restarts, the
+    recursive per-subtree pass — is affordable on every grid cell.
     """
     topo = topology.mesh_tree(mesh_shape)
     depths = np.asarray([topo.depth(int(c)) for c in topo.link_nodes])
@@ -86,12 +91,14 @@ def mapping_report(traffic: np.ndarray,
                 "dcn_bytes": float(loads[depths == 1].sum())}
 
     d = traffic.shape[0]
-    best = mapping.search_mesh_mapping(mesh_shape, {}, topo, traffic=traffic)
+    best = mapping.search_mesh_mapping(mesh_shape, {}, topo, traffic=traffic,
+                                       n_random=map_restarts, recursive=True)
     identity = side(np.arange(d))
     searched = side(best.device_to_bin)
     return {"identity": identity, "searched": searched,
             "axis_perm": list(best.axis_perm),
             "axis_orders": list(best.axis_orders),
+            "n_candidates": best.n_candidates,
             "makespan_ratio": (searched["makespan"] / identity["makespan"]
                                if identity["makespan"] > 0 else 1.0),
             "total_link_bytes": float(traffic.sum() / 2.0),
@@ -162,7 +169,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
              out_dir: Optional[str] = None, grad_compress: bool = False,
              tag: str = "", profile: str = "2d",
              overrides: Optional[Dict] = None,
-             topology_aware: bool = False) -> Dict:
+             topology_aware: bool = False, map_restarts: int = 32) -> Dict:
     """One (arch x shape x mesh) cell: compile once, extract roofline terms.
 
     ``topology_aware=True`` additionally closes the partitioner loop
@@ -201,7 +208,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     if topology_aware:
         t0 = time.time()
         result["mapping"] = mapping_report(coll["traffic"],
-                                           mesh.devices.shape)
+                                           mesh.devices.shape,
+                                           map_restarts=map_restarts)
         result["mapping"]["search_s"] = round(time.time() - t0, 2)
     try:
         mem = compiled.memory_analysis()
@@ -315,7 +323,8 @@ def _print_mapping(arch_name: str, shape_name: str, profile: str,
 
 
 def mapping_grid(arch_names: List[str], shape_name: str, out_dir: str,
-                 overrides: Optional[Dict] = None) -> int:
+                 overrides: Optional[Dict] = None,
+                 map_restarts: int = 32) -> int:
     """Searched-vs-identity mapping comparison over each arch's sharding
     profiles on the multi-pod mesh (the ROADMAP 'drive mesh-axis ordering
     from the paper's partitioner' deliverable). Returns the failure count.
@@ -328,7 +337,7 @@ def mapping_grid(arch_names: List[str], shape_name: str, out_dir: str,
                 r = run_cell(arch_name, shape_name, multi_pod=True,
                              out_dir=out_dir, tag=f"map_{profile}",
                              profile=profile, overrides=overrides,
-                             topology_aware=True)
+                             topology_aware=True, map_restarts=map_restarts)
                 if r["status"] != "ok":
                     print(f"[SKIP] {arch_name}/{shape_name}/{profile}: "
                           f"{r.get('reason', '')[:60]}", flush=True)
@@ -359,6 +368,9 @@ def main() -> None:
     ap.add_argument("--topology-aware", action="store_true",
                     help="search the logical->physical device mapping over "
                          "the machine tree and report searched vs identity")
+    ap.add_argument("--map-restarts", type=int, default=32,
+                    help="random-restart candidates appended to the "
+                         "structured mapping search (0 disables)")
     ap.add_argument("--mapping-grid", action="store_true",
                     help="multi-pod searched-vs-identity comparison for "
                          "every sharding profile of the given --arch "
@@ -375,7 +387,7 @@ def main() -> None:
         archs = [args.arch] if args.arch else ["qwen2-1.5b",
                                                "deepseek-v2-lite-16b"]
         failures = mapping_grid(archs, args.shape or "train_4k", args.out,
-                                overrides)
+                                overrides, map_restarts=args.map_restarts)
         if failures:
             raise SystemExit(f"{failures} mapping-grid cells failed")
         return
@@ -405,7 +417,8 @@ def main() -> None:
                 r = run_cell(arch_name, shape_name, mp, args.out,
                              grad_compress=args.grad_compress, tag=args.tag,
                              profile=args.profile, overrides=overrides,
-                             topology_aware=args.topology_aware)
+                             topology_aware=args.topology_aware,
+                             map_restarts=args.map_restarts)
                 if r["status"] == "skip":
                     print(f"[SKIP] {arch_name}/{shape_name}/{mesh_tag}: "
                           f"{r['reason'][:60]}", flush=True)

@@ -156,6 +156,98 @@ def test_guess_tree():
 
 
 # ---------------------------------------------------------------------------
+# Batched candidate enumeration + widened search
+# ---------------------------------------------------------------------------
+
+def _naive_candidates(shape):
+    """The historical per-candidate reshape/transpose/take construction the
+    vectorized mixed-radix enumeration must reproduce row-for-row."""
+    import itertools
+    d = int(np.prod(shape))
+    out = []
+    for perm in itertools.permutations(range(len(shape))):
+        new_shape = tuple(shape[p] for p in perm)
+        choices = [range(len(mapping._axis_orders(s))) for s in new_shape]
+        for oi in itertools.product(*choices):
+            maps = [mapping._axis_orders(s)[o]
+                    for s, o in zip(new_shape, oi)]
+            ids_p = np.transpose(np.arange(d).reshape(shape), perm)
+            for ax, mp in enumerate(maps):
+                ids_p = np.take(ids_p, mp, axis=ax)
+            d2b = np.empty(d, dtype=np.int64)
+            d2b[ids_p.ravel()] = np.arange(d)
+            out.append(d2b)
+    return np.stack(out)
+
+
+def test_enumerate_candidates_matches_naive_construction():
+    for shape in [(4,), (2, 8), (2, 3, 4)]:
+        cands, meta = mapping.enumerate_candidates(shape)
+        np.testing.assert_array_equal(cands, _naive_candidates(shape))
+        assert len(meta) == cands.shape[0]
+        d = int(np.prod(shape))
+        np.testing.assert_array_equal(cands[0], np.arange(d))  # identity 1st
+        assert meta[0] == (tuple(range(len(shape))), (0,) * len(shape))
+        # every candidate is a permutation of the devices
+        assert (np.sort(cands, axis=1) == np.arange(d)).all()
+
+
+def test_enumerate_candidates_random_restarts():
+    cands, meta = mapping.enumerate_candidates((2, 8), n_random=5, seed=3)
+    base, _ = mapping.enumerate_candidates((2, 8))
+    assert cands.shape[0] == base.shape[0] + 5
+    np.testing.assert_array_equal(cands[:base.shape[0]], base)
+    assert all(m == ((0, 1), (-1, -1)) for m in meta[base.shape[0]:])
+    assert (np.sort(cands[base.shape[0]:], axis=1) == np.arange(16)).all()
+    again, _ = mapping.enumerate_candidates((2, 8), n_random=5, seed=3)
+    np.testing.assert_array_equal(cands, again)   # seeded -> reproducible
+
+
+def test_axis_orders_keep_legacy_prefix():
+    """Strict-superset guarantee: the PR 2 order set (identity/Gray/blocked)
+    must stay as a prefix so old candidates keep their indices."""
+    for size in (4, 8, 16):
+        orders = mapping._axis_orders(size)
+        np.testing.assert_array_equal(orders[0], np.arange(size))
+        np.testing.assert_array_equal(orders[1], mapping._gray(size))
+        assert len(orders) > 3                     # widened
+        keys = {tuple(int(x) for x in o) for o in orders}
+        assert len(keys) == len(orders)            # no duplicates
+    assert len(mapping._axis_orders(2)) == 2       # identity + reversed
+
+
+def test_widened_search_monotone_and_recursive_refinement():
+    """Wider candidate spaces (random restarts, per-subtree recursion) can
+    only lower the searched bottleneck, and identity stays candidate 0."""
+    topo = _asymmetric_two_level_tree()
+    rng = np.random.default_rng(7)
+    T = rng.uniform(0, 1, (16, 16))
+    T = np.triu(T, 1)
+    T = T + T.T
+    base = mapping.search_mesh_mapping((4, 4), {}, topo, traffic=T)
+    wide = mapping.search_mesh_mapping((4, 4), {}, topo, traffic=T,
+                                       n_random=24, recursive=True)
+    ident = mapping.makespan_of_device_map(T, topo, np.arange(16))
+    assert base.bottleneck <= ident + 1e-9
+    assert wide.bottleneck <= base.bottleneck + 1e-9
+    assert wide.n_candidates == base.n_candidates + 24
+    # the returned assignment really scores at the reported bottleneck
+    got = mapping.makespan_of_device_map(T, topo, wide.device_to_bin)
+    np.testing.assert_allclose(got, wide.bottleneck, rtol=1e-4)
+
+
+def test_score_device_maps_matches_looped_scorer():
+    topo = _asymmetric_two_level_tree()
+    T = mapping.collective_traffic_matrix((4, 4), {0: 100.0, 1: 7.0})
+    cands, _ = mapping.enumerate_candidates((4, 4), n_random=8, seed=0)
+    batched = mapping.score_device_maps(T, topo, cands, chunk=16)
+    looped = np.asarray([mapping.makespan_of_device_map(T, topo, c)
+                         for c in cands])
+    np.testing.assert_allclose(batched, looped, rtol=1e-4,
+                               atol=1e-5 * float(looped.max()))
+
+
+# ---------------------------------------------------------------------------
 # Mapped mesh construction
 # ---------------------------------------------------------------------------
 

@@ -124,6 +124,75 @@ def test_total_cut_and_cvol():
     np.testing.assert_allclose(np.asarray(cvol), ref, rtol=1e-5)
 
 
+def test_permutation_link_loads_matches_quotient_path():
+    """The mapping case is a permutation of T: the gathered-indicator GEMM
+    identity must reproduce quotient_matrix + link_loads_tree exactly."""
+    rng = np.random.default_rng(11)
+    topo = production_tree(2, 2, 2)
+    d = topo.k
+    T = rng.uniform(0, 5, (d, d))
+    T = np.triu(T, 1)
+    T = T + T.T
+    for _ in range(3):
+        d2b = rng.permutation(d)
+        loads = np.asarray(objective.permutation_link_loads(
+            jnp.asarray(T, jnp.float32), jnp.asarray(topo.subtree),
+            jnp.asarray(d2b, jnp.int32)))
+        # reference: relabel T into bin space, run the quotient path
+        W = np.zeros_like(T)
+        W[np.ix_(d2b, d2b)] = T
+        ref = np.asarray(objective.link_loads_tree(
+            jnp.asarray(W, jnp.float32), jnp.asarray(topo.subtree)))
+        np.testing.assert_allclose(loads, ref, rtol=1e-5, atol=1e-4)
+
+
+def test_permutation_batch_scorer_matches_single():
+    """LCA-bucketed batch scorer == dense single-candidate identity."""
+    rng = np.random.default_rng(12)
+    topo = balanced_tree((2, 2, 2), level_cost=(4.0, 2.0, 1.0))
+    d = topo.k
+    T = rng.uniform(0, 3, (d, d)) * (rng.uniform(0, 1, (d, d)) > 0.4)
+    T = np.triu(T, 1)
+    T = T + T.T
+    cands = np.stack([rng.permutation(d) for _ in range(5)])
+    iu = np.triu_indices(d, 1)
+    w = T[iu]
+    nz = w > 0
+    loads = np.asarray(objective.permutation_link_loads_batch(
+        jnp.asarray(cands, jnp.int32),
+        jnp.asarray(iu[0][nz], jnp.int32), jnp.asarray(iu[1][nz], jnp.int32),
+        jnp.asarray(w[nz], jnp.float32), jnp.asarray(topo.lca_table()),
+        jnp.asarray(topo.subtree),
+        jnp.asarray(topo.node_subtree_indicator()),
+        k=topo.k, n_nodes=topo.n_nodes))
+    for c, want in zip(cands, loads):
+        one = np.asarray(objective.permutation_link_loads(
+            jnp.asarray(T, jnp.float32), jnp.asarray(topo.subtree),
+            jnp.asarray(c, jnp.int32)))
+        np.testing.assert_allclose(want, one, rtol=1e-5, atol=1e-4)
+
+
+def test_makespan_tree_batch_matches_per_candidate():
+    """vmap fallback: batched breakdown == one makespan_tree per row."""
+    g = _rand_graph(30, 90, seed=13)
+    topo = balanced_tree((2, 3))
+    rng = np.random.default_rng(13)
+    parts = rng.integers(0, topo.k, (4, g.n_nodes))
+    br = objective.makespan_tree_batch(
+        jnp.asarray(parts, jnp.int32), jnp.asarray(g.senders),
+        jnp.asarray(g.receivers), jnp.asarray(g.edge_weight),
+        jnp.asarray(g.node_weight), jnp.asarray(topo.subtree),
+        jnp.asarray(topo.F_l), k=topo.k)
+    assert br.comm.shape == (4, topo.n_links)
+    for i in range(4):
+        one = _jx_makespan(g, topo, parts[i])
+        np.testing.assert_allclose(np.asarray(br.makespan)[i],
+                                   float(one.makespan), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(br.comm)[i],
+                                   np.asarray(one.comm), rtol=1e-5,
+                                   atol=1e-4)
+
+
 def test_soft_cost_approaches_max():
     comp = jnp.asarray([3.0, 7.0, 1.0])
     comm = jnp.asarray([2.0, 9.0])

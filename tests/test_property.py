@@ -119,6 +119,47 @@ def test_graph_strategy_invariants(g):
     assert all((v, u) in fwd for u, v in fwd)        # symmetric
 
 
+@st.composite
+def traffic_tree_and_candidates(draw):
+    """Random symmetric traffic matrix x random machine tree x a batch of
+    random device->bin permutations (the mapping-search regime)."""
+    branching = draw(st.sampled_from([(2, 2), (4,), (2, 3), (2, 2, 2),
+                                      (3, 2)]))
+    topo = balanced_tree(branching)
+    d = topo.k
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    T = rng.uniform(0, 4, (d, d)) * (rng.uniform(0, 1, (d, d)) > 0.3)
+    T = np.triu(T, 1)
+    T = T + T.T
+    n_cand = draw(st.integers(1, 6))
+    cands = np.stack([rng.permutation(d) for _ in range(n_cand)])
+    return topo, T, cands
+
+
+@given(traffic_tree_and_candidates())
+@settings(max_examples=30, deadline=None)
+def test_batched_permutation_scorer_agrees_with_fallbacks(ttc):
+    """The batched permutation scorer, the vmap(makespan_tree) fallback and
+    the per-candidate makespan_of_device_map must agree per candidate."""
+    from repro.core import mapping
+    topo, T, cands = ttc
+    batched = mapping.score_device_maps(T, topo, cands)
+    looped = np.asarray([mapping.makespan_of_device_map(T, topo, c)
+                         for c in cands])
+    s, r, w = mapping._traffic_edges(T)
+    br = objective.makespan_tree_batch(
+        jnp.asarray(cands, jnp.int32), s, r, w,
+        jnp.zeros(T.shape[0], jnp.float32), jnp.asarray(topo.subtree),
+        jnp.asarray(topo.F_l), k=topo.k)
+    vmapped = np.asarray(br.comm_max)
+    scale = max(float(np.abs(looped).max()), 1.0)
+    np.testing.assert_allclose(batched, looped, rtol=1e-4,
+                               atol=1e-5 * scale)
+    np.testing.assert_allclose(vmapped, looped, rtol=1e-4,
+                               atol=1e-5 * scale)
+
+
 @given(st.integers(0, 100))
 @settings(max_examples=20, deadline=None)
 def test_monotone_edge_addition(seed):
