@@ -1,0 +1,103 @@
+"""Compare a BENCH_*.json against its checked-in baseline and fail on
+wall-clock regression — the bench smoke tier's regression gate.
+
+    python scripts/bench_compare.py benchmarks/baselines/BENCH_foo.json \
+        BENCH_foo.json [--max-ratio 1.5] [--min-seconds 0.25]
+
+Every numeric field ending in ``_s`` (seconds) is compared at matching
+JSON paths; rows whose BASELINE is under ``--min-seconds`` are reported
+but never gate (sub-250ms timings are scheduler noise on shared CI hosts).
+List-of-dict entries are keyed by their ``mesh``/``name`` field when
+present so baseline reordering or added rows don't misalign. Exits 1 when
+any gated row is slower than ``max-ratio`` x its baseline — or has
+vanished from the current run (a renamed slow row must re-baseline, not
+silently un-gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict
+
+
+def _flatten(node: Any, path: str, out: Dict[str, float]) -> None:
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _flatten(v, f"{path}.{k}" if path else str(k), out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            key = (v.get("mesh") or v.get("name") or str(i)
+                   if isinstance(v, dict) else str(i))
+            _flatten(v, f"{path}[{key}]", out)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        if path.rsplit(".", 1)[-1].endswith("_s"):
+            out[path] = float(node)
+
+
+def compare(baseline: Dict, current: Dict, max_ratio: float,
+            min_seconds: float) -> int:
+    base_rows: Dict[str, float] = {}
+    cur_rows: Dict[str, float] = {}
+    _flatten(baseline, "", base_rows)
+    _flatten(current, "", cur_rows)
+    if baseline.get("tiny") != current.get("tiny"):
+        print(f"bench_compare: tiny-tier mismatch (baseline "
+              f"tiny={baseline.get('tiny')}, current "
+              f"tiny={current.get('tiny')}) — not comparable")
+        return 2
+    failures = 0
+    shared = sorted(set(base_rows) & set(cur_rows))
+    if not shared:
+        print("bench_compare: no shared *_s rows — nothing to compare")
+        return 2
+    for key in shared:
+        b, c = base_rows[key], cur_rows[key]
+        ratio = c / b if b > 0 else float("inf")
+        gated = b >= min_seconds
+        status = "ok"
+        if gated and ratio > max_ratio:
+            status = "REGRESSION"
+            failures += 1
+        elif not gated:
+            status = "skip (noise)"
+        print(f"  {key:<42} base={b:8.4f}s cur={c:8.4f}s "
+              f"ratio={ratio:5.2f}x  {status}")
+    for key in sorted(set(cur_rows) - set(base_rows)):
+        print(f"  {key:<42} (new row, no baseline)")
+    for key in sorted(set(base_rows) - set(cur_rows)):
+        # a gated row vanishing is a gate failure, not a silent pass —
+        # otherwise renaming a slow row un-gates it
+        if base_rows[key] >= min_seconds:
+            print(f"  {key:<42} base={base_rows[key]:8.4f}s MISSING "
+                  f"from current run")
+            failures += 1
+        else:
+            print(f"  {key:<42} (baseline-only row, under gate floor)")
+    if failures:
+        print(f"bench_compare: {failures} row(s) regressed beyond "
+              f"{max_ratio}x baseline")
+        return 1
+    print(f"bench_compare: {len(shared)} row(s) within {max_ratio}x "
+          f"baseline")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="fail when current > max-ratio x baseline")
+    ap.add_argument("--min-seconds", type=float, default=0.25,
+                    help="baseline rows under this never gate (noise)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    sys.exit(compare(baseline, current, args.max_ratio, args.min_seconds))
+
+
+if __name__ == "__main__":
+    main()

@@ -18,4 +18,15 @@ if [[ "${BENCH_SMOKE:-0}" == "1" ]]; then
     echo "-- $mod"
     REPRO_BENCH_TINY=1 python -c "import importlib; importlib.import_module('$mod').run()"
   done
+  echo "== bench regression gate (scripts/bench_compare.py) =="
+  for base in benchmarks/baselines/BENCH_*.json; do
+    [[ -e "$base" ]] || continue
+    cur="$(basename "$base")"
+    if [[ -f "$cur" ]]; then
+      echo "-- $cur vs $base"
+      python scripts/bench_compare.py "$base" "$cur"
+    else
+      echo "-- $cur missing (benchmark did not emit it)" && exit 1
+    fi
+  done
 fi

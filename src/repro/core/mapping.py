@@ -379,7 +379,9 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
                         traffic: Optional[np.ndarray] = None,
                         n_random: int = 0, seed: int = 0,
                         recursive: bool = False,
-                        chunk: int = 128) -> MeshMapping:
+                        chunk: int = 128,
+                        warm_starts: Optional[Sequence[np.ndarray]] = None
+                        ) -> MeshMapping:
     """Enumerate logical-axis permutations x per-axis orders; return the
     assignment with the smallest bottleneck-link traffic cost.
 
@@ -398,6 +400,11 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
     ``traffic`` supplies a measured [D, D] device-pair matrix (e.g. from
     ``launch.collectives.parse_collectives(..., traffic=True)``) instead of
     the per-axis ring model built from ``axis_bytes``.
+
+    ``warm_starts`` appends prior winning assignments (each a device->bin
+    permutation) to the candidate set — the recompile fixed-point loop
+    (``launch.placement``) feeds each round's best order back in, so a
+    later round can never regress below an earlier winner.
     """
     shape = tuple(mesh_shape)
     d = int(np.prod(shape))
@@ -411,10 +418,21 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
         T = collective_traffic_matrix(shape, axis_bytes)
     cands, meta = enumerate_candidates(shape, max_axis_perms,
                                        n_random=n_random, seed=seed)
+    ws_lo = None
+    if warm_starts is not None and len(warm_starts) > 0:
+        ws = np.stack([np.asarray(w, dtype=np.int64) for w in warm_starts])
+        if ws.shape[1] != d or not (np.sort(ws, axis=1)
+                                    == np.arange(d)).all():
+            raise ValueError("warm starts must be device->bin permutations "
+                             f"of range({d})")
+        ws_lo = cands.shape[0]
+        cands = np.concatenate([cands, ws], axis=0)
+        meta.extend((tuple(range(len(shape))), (-1,) * len(shape))
+                    for _ in range(ws.shape[0]))
     ctx = _make_scorer_ctx(T, topo)
     costs = score_device_maps(T, topo, cands, chunk=chunk, _ctx=ctx)
     # Shortlist + canonical re-score: selection ran on the batched f32
-    # pipeline, but every consumer (mapping_report, train's identity
+    # pipeline, but every consumer (the placement session, train's identity
     # comparison, tests) observes costs through the makespan_tree path, and
     # the two scorers can disagree by f32 rounding on near-ties. Re-scoring
     # the batched top candidates AND identity through the canonical path
@@ -423,6 +441,9 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
     short = list(np.argsort(costs, kind="stable")[:8])
     if 0 not in short:
         short.append(0)                      # identity is always re-scored
+    if ws_lo is not None:                    # ... and so is every warm start
+        short.extend(j for j in range(ws_lo, cands.shape[0])
+                     if j not in short)
     edges = _traffic_edges(T)
     canon = {int(j): float(_device_map_breakdown(T, topo, cands[j],
                                                  edges).comm_max)
@@ -442,6 +463,24 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
                 orders_idx = (-1,) * len(shape)
     return MeshMapping(perm, orders_idx, np.asarray(best_d2b, np.int64),
                        best_cost, n_candidates=int(cands.shape[0]))
+
+
+def search(mesh_shape: Sequence[int], topo: TreeTopology,
+           traffic: np.ndarray, *,
+           warm_starts: Optional[Sequence[np.ndarray]] = None,
+           n_random: int = 0, seed: int = 0, recursive: bool = False,
+           chunk: int = 128,
+           max_axis_perms: Optional[int] = None) -> MeshMapping:
+    """Placement-facing entry of the mesh-mapping search: measured traffic
+    is mandatory (the session always has a compiled module in hand) and
+    ``warm_starts`` carries the prior winner(s) of the recompile fixed-point
+    loop, so each round's result is monotone vs every earlier round. Thin
+    keyword-only front to :func:`search_mesh_mapping`.
+    """
+    return search_mesh_mapping(mesh_shape, {}, topo, traffic=traffic,
+                               warm_starts=warm_starts, n_random=n_random,
+                               seed=seed, recursive=recursive, chunk=chunk,
+                               max_axis_perms=max_axis_perms)
 
 
 def expert_placement(traffic: np.ndarray, expert_flops: np.ndarray,

@@ -13,8 +13,9 @@ Two outputs from one parse (methodology in EXPERIMENTS.md §Roofline):
     enclosing while-loops' ``known_trip_count``;
   * the [D, D] device-pair traffic matrix (``traffic=True``) — the same
     link bytes attributed to ring-neighbor pairs *within each replica
-    group*, which is what ``core.mapping.search_mesh_mapping`` scores
-    against the machine tree (DESIGN.md §6).
+    group*, which is what ``core.mapping.search`` scores against the
+    machine tree on behalf of ``launch.placement.PlacementSession``
+    (DESIGN.md §6).
 """
 from __future__ import annotations
 

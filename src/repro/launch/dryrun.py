@@ -4,7 +4,7 @@
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
         --shape train_4k [--multi-pod] [--out results/dryrun] \
-        [--profile 2d|fsdp|sp|expert] [--topology-aware]
+        [--profile 2d|fsdp|sp|expert] [--topology-aware] [--recompile]
     PYTHONPATH=src python -m repro.launch.dryrun --all
     PYTHONPATH=src python -m repro.launch.dryrun --mapping-grid
 
@@ -15,19 +15,24 @@ Methodology (EXPERIMENTS.md §Roofline records the same):
     2F(S-1)/S, reduce-scatter F(S-1)/S, all-to-all F(S-1)/S, permute F),
     scaled by the enclosing while-loops' ``known_trip_count``. Raw operand
     sums are reported alongside.
-  * mapping search (``--topology-aware`` / ``--mapping-grid``) — the same
-    parse also attributes link bytes to device pairs inside each replica
-    group; ``core.mapping.search_mesh_mapping`` then scores logical ->
-    physical assignments against the TPU-pod tree and the report compares
-    the searched mapping with identity (DESIGN.md §6).
+  * mapping search (``--topology-aware`` / ``--mapping-grid``) — owned by
+    ``repro.launch.placement.PlacementSession``: the compiled module's
+    replica groups become a [D, D] traffic matrix, ``core.mapping.search``
+    scores logical -> physical assignments against the TPU-pod tree, and
+    with ``--recompile`` the session recompiles under the searched order
+    and diffs the two collective schedules to a fixed point (DESIGN.md §6
+    "Recompilation fixed point"). Compiles are served from the session's
+    keyed cell cache when the (arch, shape, profile, order) key repeats.
   * FLOPs / bytes — XLA's cost_analysis counts while bodies ONCE, so the
     per-device totals come from ``repro.launch.hlo_cost``: a text-level
     HLO cost model that multiplies every computation by its actual
     execution count (while ``known_trip_count`` compounded through the
     call graph). Validated against cost_analysis on loop-free modules.
 
-The XLA_FLAGS line below MUST run before any jax import (device count is
-locked at first init) — and only here, never globally.
+This module is a CLI + grid iterator; the compile/measure/search machinery
+lives in ``repro.launch.placement`` (one session shared by dryrun, train
+and serve). The XLA_FLAGS line below MUST run before any jax import
+(device count is locked at first init) — and only here, never globally.
 """
 import os
 
@@ -36,8 +41,8 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
 
 import argparse            # noqa: E402
+import dataclasses         # noqa: E402
 import json                # noqa: E402
-import time                # noqa: E402
 import traceback           # noqa: E402
 from typing import Any, Dict, List, Optional, Tuple  # noqa: E402
 
@@ -45,73 +50,23 @@ import jax                 # noqa: E402
 import numpy as np         # noqa: E402
 
 from repro import configs                  # noqa: E402
-from repro.core import mapping, topology   # noqa: E402
-from repro.dist.sharding import tree_shardings  # noqa: E402
 from repro.launch import hlo_cost          # noqa: E402
 from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch import placement         # noqa: E402
 # HLO collective accounting lives in launch/collectives.py (import-safe
 # without the XLA_FLAGS override); re-exported here for existing callers
 # (scripts/diag_cell.py, tests) that historically imported from the dry-run.
 from repro.launch.collectives import (_group_size, _link_bytes,  # noqa: F401,E402
                                       _shape_bytes, materialize_groups,
                                       parse_collectives)
-from repro.launch.steps import build_cell, rules_for  # noqa: E402
+from repro.launch.steps import build_cell, rules_for  # noqa: F401,E402
 
-
-# ---------------------------------------------------------------------------
-# Topology-aware mapping report
-# ---------------------------------------------------------------------------
-
-def mapping_report(traffic: np.ndarray, mesh_shape: Tuple[int, ...],
-                   map_restarts: int = 32) -> Dict[str, Any]:
-    """Identity vs searched logical->physical mapping over the machine tree.
-
-    ``traffic`` is the measured [D, D] device-pair link-byte matrix from
-    ``parse_collectives(..., traffic=True)``. Both sides report the paper's
-    makespan (max over links of F_l-weighted bytes — dimensionless relative
-    cost), the bottleneck link's raw bytes, and the bytes crossing the
-    cross-pod DCN links (depth-1 tree links). ``device_order`` is ready for
-    ``mesh_lib.make_mapped_mesh``; searched <= identity always holds
-    because identity is the search's first candidate.
-
-    The search scores the whole candidate set in one batched jitted
-    evaluation (DESIGN.md §6 "Batched search"), so the widened space —
-    reversed/shifted ring orders, ``map_restarts`` random restarts, the
-    recursive per-subtree pass — is affordable on every grid cell.
-    """
-    topo = topology.mesh_tree(mesh_shape)
-    depths = np.asarray([topo.depth(int(c)) for c in topo.link_nodes])
-    f_l = np.asarray(topo.F_l)
-
-    def side(device_to_bin: np.ndarray) -> Dict[str, float]:
-        loads = mapping.link_loads_of_device_map(traffic, topo,
-                                                 device_to_bin)
-        return {"makespan": float((f_l * loads).max()),
-                "bottleneck_link_bytes": float(loads.max()),
-                "dcn_bytes": float(loads[depths == 1].sum())}
-
-    d = traffic.shape[0]
-    best = mapping.search_mesh_mapping(mesh_shape, {}, topo, traffic=traffic,
-                                       n_random=map_restarts, recursive=True)
-    identity = side(np.arange(d))
-    searched = side(best.device_to_bin)
-    return {"identity": identity, "searched": searched,
-            "axis_perm": list(best.axis_perm),
-            "axis_orders": list(best.axis_orders),
-            "n_candidates": best.n_candidates,
-            "makespan_ratio": (searched["makespan"] / identity["makespan"]
-                               if identity["makespan"] > 0 else 1.0),
-            "total_link_bytes": float(traffic.sum() / 2.0),
-            "device_order": best.device_to_bin.tolist()}
-
-
-# ---------------------------------------------------------------------------
-# Compile helper + calibration
-# ---------------------------------------------------------------------------
 
 def _compile(arch, shape, mesh, overrides=None, grad_compress=False,
              profile="2d"):
-    from repro.dist.sharding import sanitize_tree
+    """Compile one cell on an explicit mesh (scripts/diag_cell.py's entry —
+    the dry-run itself goes through the placement session's cached path)."""
+    from repro.dist.sharding import sanitize_tree, tree_shardings
     rules = rules_for(arch.family, mesh.axis_names, profile=profile)
     cell = build_cell(arch, shape, rules, grad_compress=grad_compress,
                       overrides=overrides)
@@ -123,11 +78,6 @@ def _compile(arch, shape, mesh, overrides=None, grad_compress=False,
         lowered = jitted.lower(*cell["args_sds"])
         compiled = lowered.compile()
     return cell, compiled
-
-
-def _cost(compiled) -> Tuple[float, float]:
-    c = hlo_cost.normalize_cost_analysis(compiled.cost_analysis())
-    return float(c.get("flops", 0.0)), float(c.get("bytes accessed", 0.0))
 
 
 _FLASH_SCOPE = r"flash|_flash"
@@ -166,20 +116,16 @@ def attention_kernel_bytes(arch, shape) -> float:
 # ---------------------------------------------------------------------------
 
 def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
-             out_dir: Optional[str] = None, grad_compress: bool = False,
+             out_dir: Optional[str] = None, grad_compress=False,
              tag: str = "", profile: str = "2d",
              overrides: Optional[Dict] = None,
-             topology_aware: bool = False, map_restarts: int = 32) -> Dict:
-    """One (arch x shape x mesh) cell: compile once, extract roofline terms.
-
-    ``topology_aware=True`` additionally closes the partitioner loop
-    (DESIGN.md §6): the compiled module's per-collective replica groups
-    become a device-pair traffic matrix, ``core.mapping.search_mesh_mapping``
-    scores logical->physical candidates over the machine tree, and the
-    result carries a searched-vs-identity comparison plus the device order
-    ``mesh_lib.make_mapped_mesh`` would build the production mesh with —
-    all from the single compile (the mapping permutes physical devices
-    under an unchanged SPMD program).
+             topology_aware: bool = False, map_restarts: int = 32,
+             recompile: bool = False,
+             session: Optional[placement.PlacementSession] = None) -> Dict:
+    """One (arch x shape x mesh) cell through the placement session:
+    compile (or cache-hit), extract roofline terms, and — with
+    ``topology_aware`` — run the searched-vs-identity mapping comparison,
+    recompiling under the searched order when ``recompile`` is set.
     """
     arch = configs.get(arch_name)
     shape = arch.shapes[shape_name]
@@ -191,61 +137,29 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         result["reason"] = shape.skip_reason
         return _emit(result, out_dir)
 
-    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
-    chips = int(np.prod(mesh.devices.shape))
+    session = session or placement.PlacementSession(
+        map_restarts=map_restarts)
+    topology_aware = topology_aware or recompile   # recompile implies it
+    mesh_shape, _axes = mesh_lib.production_mesh_spec(multi_pod)
+    chips = int(np.prod(mesh_shape))
 
     # production compile: collectives + memory + proof of compilability
     prod_overrides = dict(overrides or {})
     if arch.family == "lm" and shape.kind in ("train", "prefill"):
         prod_overrides.setdefault("q_chunk", 0)  # single q block (see doc)
-    t0 = time.time()
-    cell, compiled = _compile(arch, shape, mesh, prod_overrides,
-                              grad_compress, profile=profile)
-    t_compile = time.time() - t0
-    hlo = compiled.as_text()
-    coll = parse_collectives(hlo, chips, cell["scan_lengths"],
-                             traffic=topology_aware)
     if topology_aware:
-        t0 = time.time()
-        result["mapping"] = mapping_report(coll["traffic"],
-                                           mesh.devices.shape,
-                                           map_restarts=map_restarts)
-        result["mapping"]["search_s"] = round(time.time() - t0, 2)
-    try:
-        mem = compiled.memory_analysis()
-        mem_info = {
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-        }
-    except Exception:                                    # pragma: no cover
-        mem_info = {}
-    agg_flops, agg_bytes = _cost(compiled)
-    del compiled
+        res = session.place(arch_name, shape_name, multi_pod=multi_pod,
+                            profile=profile, grad_compress=grad_compress,
+                            overrides=prod_overrides, recompile=recompile)
+        rec = res.record
+        result["mapping"] = dataclasses.asdict(res.report)
+    else:
+        rec = session.measure(arch_name, shape_name, multi_pod=multi_pod,
+                              profile=profile, grad_compress=grad_compress,
+                              overrides=prod_overrides)
+    cal, bytes_deep = rec.hlo_cal, rec.bytes_deep
 
-    # loop-aware totals from the text cost model
-    t0 = time.time()
-    comps, entry = hlo_cost.parse(hlo)
-    mult = (hlo_cost.multipliers(comps, entry) if entry else {})
-    cal = {k: 0.0 for k in ("flops", "bytes", "bytes_fused", "bytes_tight",
-                            "bytes_tight_f32", "transcendentals")}
-    bytes_deep = 0.0     # tight-HBM bytes strictly inside nested whiles
-    deep_threshold = (max(cell["scan_lengths"]) if cell["scan_lengths"]
-                      else 1)
-    for name, m in mult.items():
-        c = comps[name]
-        cal["flops"] += m * c.flops
-        cal["bytes"] += m * c.bytes
-        cal["bytes_fused"] += m * c.bytes_fused
-        cal["bytes_tight"] += m * (c.bytes_tight - 0.5 * c.bytes_tight_f32)
-        cal["bytes_tight_f32"] += m * c.bytes_tight_f32
-        cal["transcendentals"] += m * c.transcendentals
-        if m > deep_threshold:
-            bytes_deep += m * (c.bytes_tight - 0.5 * c.bytes_tight_f32)
-    t_cal = time.time() - t0
-    jax.clear_caches()
-
-    flops_dev = max(cal["flops"], agg_flops)
+    flops_dev = max(cal["flops"], rec.agg_flops)
     # HBM proxy = tight op set (GEMM I/O, data movement, collectives; see
     # hlo_cost._TIGHT_HBM), with f32 traffic halved (XLA:CPU upcasts the
     # bf16 policy path; the TPU target moves bf16). For LM train/prefill,
@@ -259,8 +173,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     else:
         bytes_dev = cal["bytes_tight"]
         bytes_deep = 0.0
-    bytes_all_dev = max(cal["bytes"], agg_bytes)
-    link_dev = float(sum(coll["link_bf16"].values()))
+    bytes_all_dev = max(cal["bytes"], rec.agg_bytes)
+    link_dev = float(sum(rec.link_bf16.values()))
     model_fl = arch.model_flops(shape.name)
 
     compute_s = flops_dev / mesh_lib.PEAK_FLOPS
@@ -273,20 +187,21 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     result.update({
         "status": "ok",
         "chips": chips,
-        "compile_s": round(t_compile, 2), "calibrate_s": round(t_cal, 2),
+        "compile_s": rec.compile_s, "calibrate_s": rec.calibrate_s,
+        "cache_hit": rec.cached,
         "per_device": {"flops": flops_dev, "bytes": bytes_dev,
                        "bytes_unfused": bytes_all_dev,
                        "bytes_attn_xla": bytes_deep,
                        "bytes_attn_kernel": attn_dev,
-                       "collective_link_bytes": coll["link_bf16"],
-                       "collective_link_bytes_raw_f32": coll["link"],
-                       "collective_operand_bytes": coll["operand"],
-                       "n_collectives": coll["count"]},
+                       "collective_link_bytes": rec.link_bf16,
+                       "collective_link_bytes_raw_f32": rec.link,
+                       "collective_operand_bytes": rec.operand,
+                       "n_collectives": rec.n_collectives},
         "total": {"flops": flops_dev * chips, "bytes": bytes_dev * chips,
                   "collective_link_bytes": link_dev * chips},
-        "agg_once": {"flops": agg_flops, "bytes": agg_bytes},
+        "agg_once": {"flops": rec.agg_flops, "bytes": rec.agg_bytes},
         "hlo_cost": cal,
-        "memory_analysis": mem_info,
+        "memory_analysis": rec.memory,
         "model_flops": model_fl,
         "useful_ratio": (model_fl / (flops_dev * chips)
                          if flops_dev else None),
@@ -294,7 +209,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         "dominant": dominant,
         "step_time_bound_s": bound,
         "roofline_fraction": (compute_s / bound if bound > 0 else None),
-        "scan_lengths": cell["scan_lengths"],
+        "scan_lengths": rec.scan_lengths,
     })
     return _emit(result, out_dir)
 
@@ -310,25 +225,21 @@ def _emit(result: Dict, out_dir: Optional[str]) -> Dict:
     return result
 
 
-def _print_mapping(arch_name: str, shape_name: str, profile: str,
-                   rep: Dict) -> None:
-    ident, srch = rep["identity"], rep["searched"]
-    print(f"[MAP]  {arch_name}/{shape_name}/{profile} "
-          f"makespan id={ident['makespan']:.3e} "
-          f"searched={srch['makespan']:.3e} "
-          f"(ratio {rep['makespan_ratio']:.3f}) "
-          f"dcn_bytes id={ident['dcn_bytes']:.3e} "
-          f"searched={srch['dcn_bytes']:.3e} "
-          f"perm={tuple(rep['axis_perm'])}", flush=True)
+def _report_of(result: Dict) -> placement.PlacementReport:
+    return placement.PlacementReport(**result["mapping"])
 
 
 def mapping_grid(arch_names: List[str], shape_name: str, out_dir: str,
                  overrides: Optional[Dict] = None,
-                 map_restarts: int = 32) -> int:
+                 map_restarts: int = 32, recompile: bool = False,
+                 session: Optional[placement.PlacementSession] = None) -> int:
     """Searched-vs-identity mapping comparison over each arch's sharding
-    profiles on the multi-pod mesh (the ROADMAP 'drive mesh-axis ordering
-    from the paper's partitioner' deliverable). Returns the failure count.
+    profiles on the multi-pod mesh, one shared placement session for the
+    whole sweep (repeat invocations hit the compiled-cell cache; the table
+    lands in EXPERIMENTS.md). Returns the failure count.
     """
+    session = session or placement.PlacementSession(
+        map_restarts=map_restarts)
     failures = 0
     for arch_name in arch_names:
         arch = configs.get(arch_name)
@@ -337,12 +248,16 @@ def mapping_grid(arch_names: List[str], shape_name: str, out_dir: str,
                 r = run_cell(arch_name, shape_name, multi_pod=True,
                              out_dir=out_dir, tag=f"map_{profile}",
                              profile=profile, overrides=overrides,
-                             topology_aware=True, map_restarts=map_restarts)
+                             topology_aware=True, map_restarts=map_restarts,
+                             recompile=recompile, session=session)
                 if r["status"] != "ok":
                     print(f"[SKIP] {arch_name}/{shape_name}/{profile}: "
                           f"{r.get('reason', '')[:60]}", flush=True)
                     continue
-                _print_mapping(arch_name, shape_name, profile, r["mapping"])
+                rep = _report_of(r)
+                print(rep.summary(), flush=True)
+                if recompile:
+                    print(rep.diff_summary(), flush=True)
             except Exception as e:
                 failures += 1
                 print(f"[FAIL] {arch_name}/{shape_name}/{profile}: {e}",
@@ -350,6 +265,9 @@ def mapping_grid(arch_names: List[str], shape_name: str, out_dir: str,
                 traceback.print_exc()
             finally:
                 jax.clear_caches()
+    print(f"[CACHE] compiles={session.n_compiles} "
+          f"hits={session.n_cache_hits} dir={session.cache_dir}",
+          flush=True)
     return failures
 
 
@@ -365,12 +283,24 @@ def main() -> None:
     ap.add_argument("--profile", default="2d",
                     help="lm sharding profile: 2d | fsdp | sp | expert")
     ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--grad-compress-block", type=int, default=0,
+                    help="per-block compression scale size (power of two; "
+                         "implies --grad-compress; 0 = one scale per "
+                         "tensor)")
     ap.add_argument("--topology-aware", action="store_true",
                     help="search the logical->physical device mapping over "
                          "the machine tree and report searched vs identity")
+    ap.add_argument("--recompile", action="store_true",
+                    help="recompile under the searched order and diff the "
+                         "two XLA collective schedules to a fixed point "
+                         "(implies --topology-aware)")
     ap.add_argument("--map-restarts", type=int, default=32,
                     help="random-restart candidates appended to the "
                          "structured mapping search (0 disables)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="compiled-cell cache directory (default "
+                         "$REPRO_PLACEMENT_CACHE or "
+                         "results/placement_cache; '' disables)")
     ap.add_argument("--mapping-grid", action="store_true",
                     help="multi-pod searched-vs-identity comparison for "
                          "every sharding profile of the given --arch "
@@ -382,12 +312,18 @@ def main() -> None:
     for kv in args.override:
         k, v = kv.split("=")
         overrides[k] = int(v)
+    grad_compress = (args.grad_compress_block
+                     or args.grad_compress)
+    topology_aware = args.topology_aware or args.recompile
+    session = placement.PlacementSession(cache_dir=args.cache_dir,
+                                         map_restarts=args.map_restarts)
 
     if args.mapping_grid:
         archs = [args.arch] if args.arch else ["qwen2-1.5b",
                                                "deepseek-v2-lite-16b"]
         failures = mapping_grid(archs, args.shape or "train_4k", args.out,
-                                overrides, map_restarts=args.map_restarts)
+                                overrides, map_restarts=args.map_restarts,
+                                recompile=args.recompile, session=session)
         if failures:
             raise SystemExit(f"{failures} mapping-grid cells failed")
         return
@@ -415,17 +351,19 @@ def main() -> None:
             mesh_tag = "2x16x16" if mp else "16x16"
             try:
                 r = run_cell(arch_name, shape_name, mp, args.out,
-                             grad_compress=args.grad_compress, tag=args.tag,
+                             grad_compress=grad_compress, tag=args.tag,
                              profile=args.profile, overrides=overrides,
-                             topology_aware=args.topology_aware,
-                             map_restarts=args.map_restarts)
+                             topology_aware=topology_aware,
+                             map_restarts=args.map_restarts,
+                             recompile=args.recompile, session=session)
                 if r["status"] == "skip":
                     print(f"[SKIP] {arch_name}/{shape_name}/{mesh_tag}: "
                           f"{r['reason'][:60]}", flush=True)
                 else:
                     t = r["roofline_terms"]
+                    hit = " (cache)" if r.get("cache_hit") else ""
                     print(f"[OK]   {arch_name}/{shape_name}/{mesh_tag} "
-                          f"compile={r['compile_s']}s "
+                          f"compile={r['compile_s']}s{hit} "
                           f"comp={t['compute_s']:.3e} "
                           f"mem={t['memory_s']:.3e} "
                           f"coll={t['collective_s']:.3e} "
@@ -433,8 +371,10 @@ def main() -> None:
                           f"roofline={r['roofline_fraction']:.2f}",
                           flush=True)
                     if "mapping" in r:
-                        _print_mapping(arch_name, shape_name, args.profile,
-                                       r["mapping"])
+                        rep = _report_of(r)
+                        print(rep.summary(), flush=True)
+                        if args.recompile:
+                            print(rep.diff_summary(), flush=True)
             except Exception as e:
                 failures += 1
                 print(f"[FAIL] {arch_name}/{shape_name}/{mesh_tag}: {e}",
@@ -442,6 +382,9 @@ def main() -> None:
                 traceback.print_exc()
             finally:
                 jax.clear_caches()
+    print(f"[CACHE] compiles={session.n_compiles} "
+          f"hits={session.n_cache_hits} dir={session.cache_dir}",
+          flush=True)
     if failures:
         raise SystemExit(f"{failures} dry-run cells failed")
 

@@ -59,6 +59,21 @@ def production_mesh_spec(multi_pod: bool = False
     return (16, 16), ("data", "model")
 
 
+def serving_mesh_spec(n_devices: Optional[int] = None
+                      ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """(shape, axis names) for a serving process: the production spec when
+    the device count matches a known machine (256/512 chips), otherwise a
+    1-D 'data' mesh over the local devices (smoke / CPU). The serving
+    driver routes through this + ``PlacementSession`` instead of
+    hardcoding its own mesh."""
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    if n == CHIPS_MULTI_POD:
+        return production_mesh_spec(multi_pod=True)
+    if n == CHIPS_SINGLE_POD:
+        return production_mesh_spec(multi_pod=False)
+    return (max(n, 1),), ("data",)
+
+
 def make_production_mesh(*, multi_pod: bool = False,
                          device_order: Optional[np.ndarray] = None):
     shape, axes = production_mesh_spec(multi_pod)

@@ -2,7 +2,16 @@
 (recsys).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-        --batch 4 --prompt-len 16 --gen-len 32
+        --batch 4 --prompt-len 16 --gen-len 32 [--profile 2d] \
+        [--topology-aware]
+
+Meshes come from ``launch.placement.PlacementSession`` like every other
+launcher: the serving mesh spec is the production (pod, data, model) shape
+when the device count matches a known machine and a 1-D data mesh
+otherwise, and ``--topology-aware`` probe-compiles one decode step, scores
+its collective traffic over the machine tree, and rebuilds the mesh with
+the searched device order before serving. ``--profile`` picks the LM
+sharding profile (DESIGN.md §Sharding-profiles).
 """
 from __future__ import annotations
 
@@ -14,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.launch.placement import PlacementSession
 from repro.launch.steps import rules_for
 
 
@@ -25,6 +35,12 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--profile", default="2d",
+                    help="lm sharding profile: 2d | fsdp | sp | expert")
+    ap.add_argument("--topology-aware", action="store_true",
+                    help="search the logical->physical device order from "
+                         "one probe-compiled decode step before serving")
+    ap.add_argument("--map-restarts", type=int, default=32)
     args = ap.parse_args()
 
     arch = configs.get(args.arch)
@@ -34,8 +50,9 @@ def main() -> None:
     cfg = arch.smoke_config() if args.smoke else arch.make_config(
         "decode_32k")
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",))
-    rules = rules_for("lm", mesh.axis_names)
+    session = PlacementSession(map_restarts=args.map_restarts)
+    mesh = session.serving_mesh()
+    rules = rules_for("lm", mesh.axis_names, profile=args.profile)
     from repro.models import transformer as tr
 
     params, _ = tr.init(jax.random.PRNGKey(0), cfg, rules)
@@ -44,10 +61,21 @@ def main() -> None:
     toks = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                               cfg.vocab)
 
-    decode = jax.jit(lambda p, c, t, pos: tr.decode_step(p, c, t, pos, cfg,
-                                                         rules))
+    def decode_fn(p, c, t, pos):
+        return tr.decode_step(p, c, t, pos, cfg, rules)
+
+    decode = jax.jit(decode_fn)
     with mesh:
         cache, _ = tr.init_cache(cfg, args.batch, max_seq, rules)
+    if args.topology_aware and n_dev > 1:
+        probe = (params, cache, toks[:, :1], jnp.int32(0))
+        mesh, rep = session.map_step(decode_fn, probe,
+                                     mesh, [cfg.n_layers],
+                                     tag="decode-step")
+        print(rep.summary(), flush=True)
+        with mesh:
+            cache, _ = tr.init_cache(cfg, args.batch, max_seq, rules)
+    with mesh:
         # prefill by stepping the decode cache (simple, exact)
         t0 = time.time()
         out = []

@@ -70,7 +70,7 @@ def _with_compress_state(ret: Dict[str, Any], params_sds, pspec,
 
 
 def build_cell(arch: cc.ArchDef, shape: cc.ShapeSpec, rules: Rules,
-               grad_compress: bool = False,
+               grad_compress=False,
                overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """Returns dict with:
         step: callable
@@ -80,26 +80,31 @@ def build_cell(arch: cc.ArchDef, shape: cc.ShapeSpec, rules: Rules,
         scan_lengths: list of scan trip counts (for HLO collective scaling)
 
     ``overrides`` (dry-run calibration): n_layers / q_chunk / kv_chunk /
-    edge_chunk override the model config; ``arcs`` overrides the shape meta.
+    edge_chunk override the model config; keys the shape's meta already
+    carries (``arcs``, ``batch``, ``seq``, ...) override the shape meta —
+    the placement session's tests compile shrunken cells this way, and the
+    override dict is part of the compiled-cell cache key.
 
     ``grad_compress`` steps take (params, opt_state, compress_state, batch)
     — the residual rides as an explicit argument so the dry-run lowers the
-    same signature the checkpointed train loop drives.
+    same signature the checkpointed train loop drives. A truthy int is the
+    per-block compression block size (dist/compress.py), forwarded to
+    ``make_train_step``.
     """
     if shape.kind == "skip":
         raise ValueError(f"{arch.name}/{shape.name} is skipped: "
                          f"{shape.skip_reason}")
     import dataclasses as _dc
     overrides = dict(overrides or {})
-    arcs_override = overrides.pop("arcs", None)
+    meta_over = {k: overrides.pop(k) for k in list(overrides)
+                 if k in shape.meta}
     cfg = arch.make_config(shape.name)
     cfg_over = {k: v for k, v in overrides.items()
                 if hasattr(cfg, k)}
     if cfg_over:
         cfg = _dc.replace(cfg, **cfg_over)
     shape = cc.ShapeSpec(shape.name, shape.kind,
-                         {**shape.meta, **({"arcs": arcs_override}
-                                           if arcs_override else {})},
+                         {**shape.meta, **meta_over},
                          shape.skip_reason)
     key = jax.random.PRNGKey(0)
 

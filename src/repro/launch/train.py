@@ -11,21 +11,21 @@ sharding profile (2d | fsdp | sp | expert) from the DESIGN.md
 §Sharding-profiles table.
 
 ``--topology-aware`` closes the partitioner loop at launch (DESIGN.md §6):
-the jitted step is compiled once on the identity mesh, the compiled
-module's collectives become a device-pair traffic matrix, and
-``core.mapping.search_mesh_mapping`` over the machine tree picks the
-logical -> physical device order the final mesh is built with
-(``launch.mesh.make_mapped_mesh``). With one local device this is a no-op.
+all meshes come from ``launch.placement.PlacementSession`` — the jitted
+step is compiled once on the identity mesh, the compiled module's
+collectives become a device-pair traffic matrix, and the session's mapping
+search over the machine tree picks the logical -> physical device order
+the final mesh is built with. With one local device this is a no-op.
 
 ``--grad-compress`` routes gradients through the int8 error-feedback round
-trip; the residual state is owned by the train loop (threaded per step,
+trip (``--grad-compress-block N`` switches to one scale per N-element
+block); the residual state is owned by the train loop (threaded per step,
 checkpointed, restored on resume).
 """
 from __future__ import annotations
 
 import argparse
 import itertools
-import time
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,6 @@ import numpy as np
 
 from repro import configs
 from repro.data import pipeline
-from repro.launch import mesh as mesh_lib
 from repro.launch.steps import rules_for
 from repro.optim import adamw
 from repro.train import loop
@@ -56,34 +55,16 @@ def make_batches(arch, cfg, batch: int, seq: int):
         yield {k: jnp.asarray(v) for k, v in b.items()}
 
 
-def searched_mesh(step, step_args, mesh, scan_lengths, map_restarts=32):
-    """Compile once on ``mesh``, search the logical->physical mapping over
-    the guessed machine tree, and return (mapped mesh, report dict).
-
-    The candidate set (axis permutations x widened per-axis orders +
-    ``map_restarts`` random restarts, recursive per-subtree pass) is scored
-    in one batched jitted evaluation — see DESIGN.md §6 "Batched search"."""
-    from repro.core import mapping, topology
-    from repro.launch.collectives import parse_collectives
-    n_dev = int(np.prod(mesh.devices.shape))
-    with mesh:
-        compiled = jax.jit(step).lower(*step_args).compile()
-    coll = parse_collectives(compiled.as_text(), n_dev, scan_lengths,
-                             traffic=True)
-    del compiled
-    jax.clear_caches()
-    topo = topology.guess_tree(n_dev)
-    best = mapping.search_mesh_mapping(mesh.devices.shape, {}, topo,
-                                       traffic=coll["traffic"],
-                                       n_random=map_restarts, recursive=True)
-    identity = mapping.makespan_of_device_map(coll["traffic"], topo,
-                                              np.arange(n_dev))
-    mapped = mesh_lib.make_mapped_mesh(mesh.devices.shape, mesh.axis_names,
-                                       best.device_to_bin)
-    return mapped, {"identity_makespan": identity,
-                    "searched_makespan": best.bottleneck,
-                    "n_candidates": best.n_candidates,
-                    "device_order": best.device_to_bin.tolist()}
+def searched_mesh(step, step_args, mesh, scan_lengths, map_restarts=32,
+                  session=None):
+    """Thin wrapper over ``PlacementSession.map_step``: compile once on
+    ``mesh``, search the logical->physical mapping over the machine tree,
+    and return (mapped mesh, PlacementReport). The session owns the whole
+    compile -> traffic -> search -> mesh loop (DESIGN.md §6)."""
+    from repro.launch.placement import PlacementSession
+    session = session or PlacementSession(map_restarts=map_restarts)
+    return session.map_step(step, step_args, mesh, scan_lengths,
+                            tag="train-step")
 
 
 def main() -> None:
@@ -98,16 +79,23 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--profile", default="2d")
     ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--grad-compress-block", type=int, default=0,
+                    help="per-block compression scale size (power of two; "
+                         "implies --grad-compress; 0 = one scale per "
+                         "tensor)")
     ap.add_argument("--topology-aware", action="store_true")
     ap.add_argument("--map-restarts", type=int, default=32,
                     help="random restarts appended to the mapping search")
     args = ap.parse_args()
+    grad_compress = args.grad_compress_block or args.grad_compress
 
+    from repro.launch.placement import PlacementSession
+    session = PlacementSession(map_restarts=args.map_restarts)
     arch = configs.get(args.arch)
     cfg = arch.smoke_config() if args.smoke else arch.make_config(
         next(iter(arch.shapes)))
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",))
+    mesh = session.local_mesh()
     rules = rules_for(arch.family, mesh.axis_names, profile=args.profile)
 
     if arch.family == "lm":
@@ -128,31 +116,31 @@ def main() -> None:
     opt = adamw.init(params, ocfg)
     step = jax.jit(make_train_step(
         lambda p, b: mdl.loss_fn(p, b, cfg, rules), ocfg,
-        grad_compress=args.grad_compress))
+        grad_compress=grad_compress))
 
     batches = make_batches(arch, cfg, args.batch, args.seq)
     if args.topology_aware and n_dev > 1:
         batch0 = next(batches)
         batches = itertools.chain([batch0], batches)
-        if args.grad_compress:
+        if grad_compress:
             from repro.dist import compress
             probe_args = (params, opt, compress.init_state(params), batch0)
         else:
             probe_args = (params, opt, batch0)
         scan_lengths = [getattr(cfg, "n_layers", 1)]
         mesh, rep = searched_mesh(step, probe_args, mesh, scan_lengths,
-                                  map_restarts=args.map_restarts)
+                                  session=session)
         print(f"topology-aware mapping: identity makespan "
-              f"{rep['identity_makespan']:.3e} -> searched "
-              f"{rep['searched_makespan']:.3e} "
-              f"({rep['n_candidates']} candidates)")
+              f"{rep.identity['makespan']:.3e} -> searched "
+              f"{rep.searched['makespan']:.3e} "
+              f"({rep.n_candidates} candidates)")
 
     lcfg = loop.LoopConfig(total_steps=args.steps,
                            ckpt_every=args.ckpt_every,
                            ckpt_dir=args.ckpt_dir,
-                           grad_compress=args.grad_compress)
-    with mesh:
-        params, opt, result = loop.run(step, params, opt, batches, lcfg)
+                           grad_compress=grad_compress)
+    params, opt, result = loop.run(step, params, opt, batches, lcfg,
+                                   mesh=mesh)
     print(f"steps={result.steps_run} resumed_from={result.resumed_from} "
           f"loss {result.losses[0]:.4f} -> {result.losses[-1]:.4f} "
           f"({result.seconds:.1f}s, stragglers={result.straggler_steps})")

@@ -12,9 +12,15 @@ Failure model exercised by tests and the end-to-end example:
 With ``LoopConfig.grad_compress`` the int8 error-feedback residual
 (``repro.dist.compress``) is part of the loop state: threaded through the
 step, saved in every checkpoint, restored on resume.
+
+The loop never BUILDS device meshes: the launcher's placement session
+(``repro.launch.placement``) decides where processes land and hands the
+finished mesh in via ``run(..., mesh=...)`` — the loop only enters its
+context around the stepping.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, Iterator, Optional
@@ -35,11 +41,13 @@ class LoopConfig:
     straggler_factor: float = 3.0
     fail_at_step: Optional[int] = None     # fault-injection (tests)
     # int8 error-feedback gradient compression (repro.dist.compress): the
-    # step_fn must come from make_train_step(grad_compress=True); the loop
+    # step_fn must come from make_train_step(grad_compress=...); the loop
     # owns the residual state — initialized once, threaded through every
     # step, checkpointed/restored next to params and opt_state, so error
-    # feedback survives restarts instead of resetting to zero.
-    grad_compress: bool = False
+    # feedback survives restarts instead of resetting to zero. A truthy
+    # int is the per-block scale size (informational here — the block is
+    # baked into the step closure; the loop only checks truthiness).
+    grad_compress: Any = False
 
 
 @dataclasses.dataclass
@@ -57,8 +65,10 @@ class InjectedFailure(RuntimeError):
 
 def run(step_fn: Callable, params: Any, opt_state: Any,
         batches: Iterator[Dict[str, np.ndarray]], cfg: LoopConfig,
-        step_offset: int = 0) -> tuple:
-    """Returns (params, opt_state, LoopResult)."""
+        step_offset: int = 0, mesh: Any = None) -> tuple:
+    """Returns (params, opt_state, LoopResult). ``mesh`` (optional) is the
+    placement-session-built mesh the stepping runs under; the loop enters
+    its context but never constructs one itself."""
     saver = ckpt.AsyncSaver()
     cstate = None
     if cfg.grad_compress:
@@ -99,27 +109,31 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
     stragglers = 0
     t_begin = time.time()
     step = start
+    mesh_ctx = mesh if mesh is not None else contextlib.nullcontext()
     try:
-        for step in range(start, cfg.total_steps):
-            if cfg.fail_at_step is not None and step == cfg.fail_at_step:
-                raise InjectedFailure(f"injected failure at step {step}")
-            batch = next(batches)
-            t0 = time.time()
-            if cfg.grad_compress:
-                params, opt_state, cstate, metrics = step_fn(
-                    params, opt_state, cstate, batch)
-            else:
-                params, opt_state, metrics = step_fn(params, opt_state,
-                                                     batch)
-            loss = float(metrics["loss"])
-            dt = time.time() - t0
-            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
-            if dt > cfg.straggler_factor * ewma and step > start + 3:
-                stragglers += 1
-            losses.append(loss)
-            if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
-                saver.save(cfg.ckpt_dir, step + 1, state_tuple())
-                ckpt.prune(cfg.ckpt_dir, cfg.keep_ckpts)
+        with mesh_ctx:
+            for step in range(start, cfg.total_steps):
+                if (cfg.fail_at_step is not None
+                        and step == cfg.fail_at_step):
+                    raise InjectedFailure(
+                        f"injected failure at step {step}")
+                batch = next(batches)
+                t0 = time.time()
+                if cfg.grad_compress:
+                    params, opt_state, cstate, metrics = step_fn(
+                        params, opt_state, cstate, batch)
+                else:
+                    params, opt_state, metrics = step_fn(params, opt_state,
+                                                         batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+                if dt > cfg.straggler_factor * ewma and step > start + 3:
+                    stragglers += 1
+                losses.append(loss)
+                if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
+                    saver.save(cfg.ckpt_dir, step + 1, state_tuple())
+                    ckpt.prune(cfg.ckpt_dir, cfg.keep_ckpts)
     finally:
         saver.join()
     if cfg.ckpt_dir:

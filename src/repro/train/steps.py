@@ -29,21 +29,24 @@ def _constrain(tree, specs):
 
 
 def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
-                    grad_compress: bool = False,
+                    grad_compress=False,
                     grad_specs: Optional[Any] = None) -> Callable:
     """loss_fn(params, batch) -> (loss, metrics dict).
 
     Returns step(params, opt_state, batch) ->
         (params, opt_state, metrics) — pure, jit/pjit-able, donate-friendly.
 
-    ``grad_compress=True`` changes the signature to
+    A truthy ``grad_compress`` changes the signature to
         step(params, opt_state, compress_state, batch) ->
         (params, opt_state, compress_state, metrics):
     the int8 error-feedback residual (``repro.dist.compress``) is carried
     by the caller across steps — the train loop initializes it with
     ``compress.init_state`` and checkpoints it next to the optimizer state
     (train/loop.py), so quantization error actually feeds back instead of
-    being rebuilt as zeros every step.
+    being rebuilt as zeros every step. ``grad_compress=True`` uses one
+    scale per tensor; an int (power of two, e.g. 256) is the per-block
+    scale size — one scale per that many elements, which keeps long-tailed
+    gradients at full int8 resolution (dist/compress.py).
 
     ``grad_specs`` (the param PartitionSpec tree) constrains gradients to
     the parameter sharding BEFORE the optimizer: XLA then reduce-scatters
@@ -59,11 +62,14 @@ def make_train_step(loss_fn: Callable, opt_cfg: adamw.AdamWConfig,
         return loss, aux, grads
 
     if grad_compress:
+        block = None if grad_compress is True else int(grad_compress)
+
         def step(params, opt_state, compress_state, batch):
             from repro.dist import compress
             loss, aux, grads = _grads(params, batch)
             grads, compress_state = compress.roundtrip(grads,
-                                                       compress_state)
+                                                       compress_state,
+                                                       block=block)
             params, opt_state, om = adamw.update(grads, opt_state, params,
                                                  opt_cfg)
             metrics = {"loss": loss, **aux, **om}
