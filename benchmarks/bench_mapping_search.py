@@ -22,6 +22,7 @@ import numpy as np
 
 from benchmarks.common import emit, tiny
 from repro.core import mapping
+from repro.core.machine import MachineSpec
 from repro.core.topology import mesh_tree
 
 # full tier ends at the 512-device cells: the qwen2 (2, 16, 16) production
@@ -29,6 +30,11 @@ from repro.core.topology import mesh_tree
 SHAPES = tiny([(4, 4), (2, 16), (4, 4, 4), (2, 16, 16), (8, 8, 8)],
               [(2, 4), (2, 2, 4)])
 SEEDS = tiny(4, 2)
+# machine-model sweep: the registered presets, incl. the heterogeneous
+# mixed-generation machine (searched <= identity is ASSERTED per row,
+# on the capacity-normalized makespan too) and the torus routing oracle
+MACHINES = tiny(["tpu_v5e-512", "gpu-superpod", "torus-2d", "tpu-mixed-32"],
+                ["gpu-superpod", "tpu-mixed-32"])
 
 
 def _traffic(shape) -> np.ndarray:
@@ -87,6 +93,58 @@ def scoring() -> list:
     return rows
 
 
+def machine_sweep() -> list:
+    """One search per registered machine preset (``--machine`` row of
+    EXPERIMENTS.md §Machine-sweep): ring-model traffic with a hot leading
+    axis, searched vs identity under the preset's own topology — tree
+    presets through the batched LCA scorer, the torus through the routing
+    oracle. The capacity-normalized makespan (comp floor = mean per-device
+    traffic over the slowest bin's speed) must obey searched <= identity
+    on EVERY preset, heterogeneous included — asserted, not just logged.
+    """
+    rows = []
+    for name in MACHINES:
+        spec = MachineSpec.preset(name)
+        d = spec.n_devices
+        T = _traffic(spec.mesh_shape)
+        topo = spec.topology()
+        # warm the per-shape jit executables off the clock (the scoring
+        # table does the same): search_s then measures steady-state
+        # search latency, stable enough for the 1.5x regression gate
+        mapping.search(spec.mesh_shape, None, T, machine=spec,
+                       n_random=tiny(16, 4))
+        t0 = time.time()
+        best = mapping.search(spec.mesh_shape, None, T, machine=spec,
+                              n_random=tiny(16, 4))
+        t_search = time.time() - t0
+        work = T.sum() / (2 * d)          # mean per-device traffic
+        ident = np.arange(d)
+        cap_i = mapping.capacity_makespan(T, topo, ident, shard_work=work)
+        cap_s = mapping.capacity_makespan(T, topo, best.device_to_bin,
+                                          shard_work=work)
+        m_i = mapping.makespan_of_device_map(T, topo, ident)
+        if best.bottleneck > m_i + 1e-9 or cap_s > cap_i + 1e-9:
+            raise AssertionError(
+                f"searched > identity on {name}: comm {best.bottleneck} "
+                f"vs {m_i}, capacity {cap_s} vs {cap_i}")
+        emit("mapping_search", f"machine_{name}", t_search,
+             devices=d, candidates=int(best.n_candidates),
+             makespan_id=round(m_i, 1),
+             makespan_searched=round(best.bottleneck, 1),
+             cap_id=round(cap_i, 1), cap_searched=round(cap_s, 1),
+             heterogeneous=spec.heterogeneous)
+        rows.append({"name": name, "devices": d,
+                     "candidates": int(best.n_candidates),
+                     "search_s": round(t_search, 4),
+                     "makespan_id": round(m_i, 3),
+                     "makespan_searched": round(best.bottleneck, 3),
+                     "ratio": round(best.bottleneck / max(m_i, 1e-9), 4),
+                     "cap_id": round(cap_i, 3),
+                     "cap_searched": round(cap_s, 3),
+                     "heterogeneous": bool(spec.heterogeneous)})
+    return rows
+
+
 def seeded_partition() -> dict:
     """S vmapped restarts vs S sequential runs of the refinement."""
     from repro.core.partitioner import PartitionConfig, partition
@@ -112,13 +170,15 @@ def seeded_partition() -> dict:
 
 def run() -> None:
     rows = scoring()
+    machines = machine_sweep()
     seeds = seeded_partition()
-    out = {"scoring": rows, "partition_seeds": seeds,
+    out = {"scoring": rows, "machines": machines, "partition_seeds": seeds,
            "tiny": os.environ.get("REPRO_BENCH_TINY", "") == "1"}
     with open("BENCH_mapping_search.json", "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote BENCH_mapping_search.json "
-          f"(max speedup {max(r['speedup'] for r in rows)}x)")
+          f"(max speedup {max(r['speedup'] for r in rows)}x, "
+          f"{len(machines)} machine presets swept)")
 
 
 if __name__ == "__main__":

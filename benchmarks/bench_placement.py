@@ -1,20 +1,26 @@
-"""The three framework integrations of the paper's objective (DESIGN.md §2):
-MoE expert placement, embedding-table shard placement, BSR locality from
-block placement. One table per integration.
+"""The framework integrations of the paper's objective (DESIGN.md §2):
+MoE expert placement (uniform and mixed-generation machines),
+embedding-table shard placement, BSR locality from block placement. One
+table per integration; rows land in ``BENCH_placement.json`` so the
+BENCH_SMOKE regression gate (scripts/bench_compare.py) covers this suite.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
 from benchmarks.common import emit, timed, tiny
 from repro.core import baselines, mapping
+from repro.core.machine import MachineSpec
 from repro.core.topology import balanced_tree, production_tree
 from repro.graph.generators import rmat
 from repro.graph.graph import from_edges
 from repro.kernels.bsr_spmm import bsr_density, to_bsr
 
 
-def expert_placement() -> None:
+def expert_placement() -> dict:
     """DeepSeek-V2-scale: 160 experts with clustered co-activation mapped
     onto 2 pods x 8 groups; bottleneck = hottest inter-group link."""
     rng = np.random.default_rng(0)
@@ -43,9 +49,57 @@ def expert_placement() -> None:
          makespan_ours=round(s_ours["makespan"], 1),
          makespan_scatter=round(s_sc["makespan"], 1),
          win=round(s_sc["comm_max"] / max(s_ours["comm_max"], 1e-9), 2))
+    return {"name": f"moe_experts_{e}", "place_s": round(secs, 4),
+            "bottleneck_ours": round(s_ours["comm_max"], 1),
+            "bottleneck_scatter": round(s_sc["comm_max"], 1),
+            "win": round(s_sc["comm_max"] / max(s_ours["comm_max"], 1e-9),
+                         2)}
 
 
-def table_placement() -> None:
+def hetero_expert_placement() -> dict:
+    """Expert placement on the mixed-generation machine preset
+    (``tpu-mixed-32``): the capacity-normalized objective must put more
+    expert FLOPs on the fast pod, and beat a speed-blind scatter on the
+    normalized makespan — the paper's heterogeneous-PE regime."""
+    spec = MachineSpec.preset("tpu-mixed-32")
+    topo = spec.tree()
+    rng = np.random.default_rng(1)
+    e = tiny(96, 32)
+    traffic = rng.uniform(0, 1, (e, e))
+    traffic = traffic + traffic.T
+    np.fill_diagonal(traffic, 0)
+    flops = rng.uniform(0.5, 2.0, e)
+    (part, res), secs = timed(mapping.expert_placement, traffic, flops,
+                              topo)
+    iu = np.triu_indices(e, 1)
+    g = from_edges(e, iu[0], iu[1],
+                   (traffic[iu] + traffic.T[iu]).astype(np.float32),
+                   flops.astype(np.float32))
+    scatter = rng.permutation(e) % topo.k
+    s_ours = baselines.score_all(g, topo, part)
+    s_sc = baselines.score_all(g, topo, scatter)
+    fast = float(flops[np.isin(part, np.arange(16))].sum())
+    slow = float(flops.sum()) - fast
+    # these ARE the claims — fail the smoke gate if the heterogeneous
+    # objective ever loses them
+    if fast < slow:
+        raise AssertionError(f"slow pod got more FLOPs ({slow} > {fast})")
+    if s_ours["makespan"] > s_sc["makespan"]:
+        raise AssertionError(
+            f"placed makespan {s_ours['makespan']} lost to speed-blind "
+            f"scatter {s_sc['makespan']}")
+    emit("placement", f"hetero_experts_{e}", secs,
+         makespan_ours=round(s_ours["makespan"], 1),
+         makespan_scatter=round(s_sc["makespan"], 1),
+         fast_pod_flops=round(fast, 1), slow_pod_flops=round(slow, 1))
+    return {"name": f"hetero_experts_{e}", "place_s": round(secs, 4),
+            "makespan_ours": round(s_ours["makespan"], 1),
+            "makespan_scatter": round(s_sc["makespan"], 1),
+            "fast_pod_flops": round(fast, 1),
+            "slow_pod_flops": round(slow, 1)}
+
+
+def table_placement() -> dict:
     """Embedding rows with Zipf access frequency and co-access edges
     (items bought together) placed over the machine tree; bottleneck =
     hottest device during the lookup all-to-all."""
@@ -68,9 +122,12 @@ def table_placement() -> None:
          hot_device_hash=round(s_hash["comp_max"], 1),
          hot_link_ours=round(s_ours["comm_max"], 1),
          hot_link_hash=round(s_hash["comm_max"], 1))
+    return {"name": f"embedding_rows_{rows}", "place_s": round(secs, 4),
+            "hot_device_ours": round(s_ours["comp_max"], 1),
+            "hot_device_hash": round(s_hash["comp_max"], 1)}
 
 
-def bsr_locality() -> None:
+def bsr_locality() -> dict:
     """Block placement concentrates edges into fewer BSR blocks — the same
     SpMM kernel touches less memory on a well-mapped graph."""
     g = rmat(*tiny((4096, 32768), (1024, 8192)), seed=3)
@@ -89,12 +146,19 @@ def bsr_locality() -> None:
          block_density_before=round(d0, 4),
          block_density_after=round(d1, 4),
          blocks_before=int(r0.shape[0]), blocks_after=int(r1.shape[0]))
+    return {"name": f"bsr_locality_{g.n_nodes}", "place_s": round(secs, 4),
+            "block_density_before": round(d0, 4),
+            "block_density_after": round(d1, 4)}
 
 
 def run() -> None:
-    expert_placement()
-    table_placement()
-    bsr_locality()
+    rows = [expert_placement(), hetero_expert_placement(),
+            table_placement(), bsr_locality()]
+    out = {"placement": rows,
+           "tiny": os.environ.get("REPRO_BENCH_TINY", "") == "1"}
+    with open("BENCH_placement.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote BENCH_placement.json ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

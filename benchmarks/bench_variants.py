@@ -1,6 +1,11 @@
 """§3.1 generalizations exercised end to end: routers, per-link F_l
-(fat tree), routing oracle + multipath (torus), vertex weights."""
+(fat tree), routing oracle + multipath (torus), vertex weights,
+heterogeneous PEs (per-bin speeds). Rows land in ``BENCH_variants.json``
+so the BENCH_SMOKE regression gate covers this suite."""
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
@@ -8,11 +13,12 @@ from benchmarks.common import emit, timed, tiny
 from repro.core import baselines, objective, reference
 from repro.core.partitioner import PartitionConfig, partition
 from repro.core.topology import (fat_tree_topology, make_tree,
-                                 torus2d_topology)
+                                 torus2d_topology, with_bin_speed)
 from repro.graph.generators import grid2d, rmat, weighted_nodes
 
 
 def run() -> None:
+    rows = []
     g = grid2d(*tiny((32, 32), (16, 16)))
 
     # routers: star-of-stars with router interior
@@ -22,6 +28,8 @@ def run() -> None:
     emit("variants", "routers_16bins", secs,
          makespan=round(res.makespan, 1),
          n_routers=int(topo_r.is_router.sum()))
+    rows.append({"name": "routers_16bins", "partition_s": round(secs, 4),
+                 "makespan": round(res.makespan, 1)})
 
     # fat tree: F_l decreasing toward the root
     topo_f = fat_tree_topology(16, arity=4, uplink_speedup=2.0)
@@ -31,6 +39,9 @@ def run() -> None:
     emit("variants", "fat_tree_Fl", secs,
          makespan=round(res_f.makespan, 1),
          makespan_cut_baseline=round(s_cut["makespan"], 1))
+    rows.append({"name": "fat_tree_Fl", "partition_s": round(secs, 4),
+                 "makespan": round(res_f.makespan, 1),
+                 "makespan_cut_baseline": round(s_cut["makespan"], 1)})
 
     # routing oracle: torus, single vs multipath
     g2 = rmat(*tiny((2000, 9000), (500, 2000)), seed=4)
@@ -42,6 +53,9 @@ def run() -> None:
         emit("variants", f"torus_multipath={mp}", 0.0,
              makespan=round(m, 1), max_link=round(comm.max(), 1),
              total_link=round(comm.sum(), 1))
+        rows.append({"name": f"torus_multipath={mp}",
+                     "makespan": round(m, 1),
+                     "max_link": round(comm.max(), 1)})
 
     # vertex weights
     gw = weighted_nodes(rmat(*tiny((3000, 15000), (800, 4000)), seed=5),
@@ -53,6 +67,30 @@ def run() -> None:
          makespan=round(res_w.makespan, 1),
          perfect_balance=round(gw.node_weight.sum() / topo_w.k, 1),
          comp_max=round(res_w.comp_max, 1))
+    rows.append({"name": "vertex_weighted", "partition_s": round(secs, 4),
+                 "makespan": round(res_w.makespan, 1),
+                 "comp_max": round(res_w.comp_max, 1)})
+
+    # heterogeneous PEs: same graph/tree, half-speed second half — the
+    # capacity-normalized partitioner shifts raw load onto the fast bins
+    topo_h = with_bin_speed(topo_w, [1.0] * 8 + [0.5] * 8)
+    res_h, secs = timed(partition, gw, topo_h, PartitionConfig(seed=0))
+    raw = np.zeros(topo_h.k)
+    np.add.at(raw, res_h.part, gw.node_weight)
+    emit("variants", "hetero_speeds", secs,
+         makespan=round(res_h.makespan, 1),
+         fast_load=round(float(raw[:8].sum()), 1),
+         slow_load=round(float(raw[8:].sum()), 1))
+    rows.append({"name": "hetero_speeds", "partition_s": round(secs, 4),
+                 "makespan": round(res_h.makespan, 1),
+                 "fast_load": round(float(raw[:8].sum()), 1),
+                 "slow_load": round(float(raw[8:].sum()), 1)})
+
+    out = {"variants": rows,
+           "tiny": os.environ.get("REPRO_BENCH_TINY", "") == "1"}
+    with open("BENCH_variants.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote BENCH_variants.json ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -2,13 +2,16 @@
 
 Builds a machine tree (2 pods x 4 chips, slow inter-pod link), partitions a
 mesh graph with the makespan objective, compares against total-cut and
-random baselines, and realizes the result as a block placement.
+random baselines, realizes the result as a block placement, and re-runs
+the partition on a registered heterogeneous machine preset
+(core/machine.py — the same registry behind the launchers' ``--machine``).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core import baselines
+from repro.core.machine import MachineSpec
 from repro.core.mapping import apply_placement, block_placement
 from repro.core.partitioner import PartitionConfig, partition, verify
 from repro.core.topology import balanced_tree
@@ -43,3 +46,19 @@ g2 = apply_placement(g, pl)
 print(f"\nblock placement: {pl.n_pad} padded rows, "
       f"{pl.block} rows/bin; fill={pl.fill.tolist()}")
 print("row-block i of any [N, F] array now lives on bin i — done.")
+
+# Machine presets: every deployment scenario is a registry entry — the
+# launchers take the same names via --machine. The mixed-generation preset
+# has nonuniform leaf speeds, so the objective becomes comp(b)/speed(b)
+# and the partitioner sends more load to the fast pod.
+print(f"\nregistered machines: {', '.join(MachineSpec.presets())}")
+mixed = MachineSpec.preset("tpu-mixed-32")
+topo_m = mixed.tree()
+res_m = partition(g, topo_m, PartitionConfig(seed=0))
+verify(g, topo_m, res_m)   # oracle is capacity-normalized too
+raw = np.zeros(topo_m.k)
+np.add.at(raw, res_m.part, g.node_weight)
+print(f"{mixed.name}: M(P)={res_m.makespan:.0f} "
+      f"fast-pod load={raw[:16].sum():.0f} "
+      f"slow-pod load={raw[16:].sum():.0f} "
+      f"(speeds {mixed.leaf_tflops[0]:.0f}/{mixed.leaf_tflops[-1]:.0f} TF)")

@@ -12,6 +12,13 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 python -m pytest -x -q "$@"
 
 if [[ "${BENCH_SMOKE:-0}" == "1" ]]; then
+  echo "== quickstart example =="
+  python examples/quickstart.py
+  echo "== machine-preset dryrun smoke (gpu-superpod, topology-aware) =="
+  # a tiny cell on a non-default machine preset: presets can't silently rot
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k \
+    --machine gpu-superpod --topology-aware \
+    --override n_layers=1 --override batch=2 --override seq=8
   echo "== benchmark smoke tier (REPRO_BENCH_TINY=1) =="
   for b in benchmarks/bench_*.py; do
     mod="benchmarks.$(basename "$b" .py)"

@@ -29,6 +29,8 @@ def main():
     ap.add_argument("--shape", required=True)
     ap.add_argument("--profile", default="2d")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--machine", default=None,
+                    help="machine-model preset (overrides --multi-pod)")
     ap.add_argument("--override", action="append", default=[])
     ap.add_argument("--top", type=int, default=14)
     args = ap.parse_args()
@@ -37,8 +39,11 @@ def main():
         k, v = kv.split("=")
         overrides[k] = int(v)
 
+    from repro.core import machine as machine_lib
+    spec = (machine_lib.resolve(args.machine)
+            or mesh_lib.production_machine(args.multi_pod))
     arch = configs.get(args.arch)
-    mesh = mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
+    mesh = mesh_lib.make_machine_mesh(spec)
     chips = mesh.devices.size
     cell, comp = _compile(arch, arch.shapes[args.shape], mesh, overrides,
                           profile=args.profile)

@@ -1,9 +1,12 @@
 """The paper's contribution: graph-constrained makespan partitioning.
 
-Submodules: topology (machine trees / routing oracles), objective (JAX
-quotient-matrix makespan), reference (path-walking oracle + brute force),
-coarsen / initial / refine / partitioner (the multilevel algorithm),
-baselines (total-cut, flat-twice), mapping (placement + mesh mapping).
+Submodules: machine (declarative MachineSpec + preset registry), topology
+(machine trees / routing oracles), objective (JAX quotient-matrix
+makespan, capacity-normalized for heterogeneous PEs), reference
+(path-walking oracle + brute force), coarsen / initial / refine /
+partitioner (the multilevel algorithm), baselines (total-cut,
+flat-twice), mapping (placement + mesh mapping).
 """
+from repro.core.machine import MachineSpec  # noqa: F401
 from repro.core.partitioner import PartitionConfig, PartitionResult, partition  # noqa: F401
 from repro.core.refine import RefineConfig  # noqa: F401

@@ -125,23 +125,31 @@ def flat_twice_partition(g: Graph, topo: TreeTopology,
 
 def score_all(g: Graph, topo: TreeTopology, part: np.ndarray) -> dict:
     """Uniform scorecard: makespan / comp_max / comm_max / total cut /
-    max communication volume — every baseline judged under every metric."""
+    max communication volume — every baseline judged under every metric.
+    On a heterogeneous machine (``topo.bin_speed``) the comp terms are
+    capacity-normalized and imbalance is measured against the per-unit-speed
+    fair share."""
     p = jnp.asarray(part, dtype=jnp.int32)
+    speed = (None if topo.bin_speed is None
+             else jnp.asarray(topo.bin_speed, dtype=jnp.float32))
     br = objective.makespan_tree(
         p, jnp.asarray(g.senders), jnp.asarray(g.receivers),
         jnp.asarray(g.edge_weight), jnp.asarray(g.node_weight),
-        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), k=topo.k)
+        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), k=topo.k,
+        speed=speed)
     W = objective.quotient_matrix(p, jnp.asarray(g.senders),
                                   jnp.asarray(g.receivers),
                                   jnp.asarray(g.edge_weight), topo.k)
     cvol = objective.comm_volumes(p, jnp.asarray(g.senders),
                                   jnp.asarray(g.receivers),
                                   jnp.asarray(g.node_weight), topo.k)
+    fair = g.total_node_weight() / (topo.k if speed is None
+                                    else float(speed.sum()))
     return {
         "makespan": float(br.makespan),
         "comp_max": float(br.comp_max),
         "comm_max": float(br.comm_max),
         "total_cut": float(objective.total_cut(W)),
         "max_cvol": float(jnp.max(cvol)),
-        "imbalance": float(br.comp_max / (g.total_node_weight() / topo.k)) - 1.0,
+        "imbalance": float(br.comp_max / fair) - 1.0,
     }

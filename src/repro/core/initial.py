@@ -59,10 +59,19 @@ def _greedy_grow(g: Graph, avail: np.ndarray, target_w: float,
 
 
 def initial_partition(g: Graph, topo: TreeTopology, seed: int = 0) -> np.ndarray:
-    """part[v] in [0, topo.k): compute-bin assignment by recursive splitting."""
+    """part[v] in [0, topo.k): compute-bin assignment by recursive splitting.
+
+    Split targets are proportional to the compute *capacity* beneath each
+    child — the leaf count on uniform machines, the summed ``bin_speed``
+    on heterogeneous ones (``core.machine``), so a pod of slow chips
+    starts with proportionally fewer vertices."""
     rng = np.random.default_rng(seed)
     part = np.zeros(g.n_nodes, dtype=np.int32)
     root = int(np.nonzero(topo.parent < 0)[0][0])
+    speed = topo.bin_speed
+
+    def cap_of(bins: np.ndarray) -> float:
+        return float(bins.size if speed is None else speed[bins].sum())
 
     def recurse(node: int, mask: np.ndarray) -> None:
         kids = topo.children(node)
@@ -78,11 +87,11 @@ def initial_partition(g: Graph, topo: TreeTopology, seed: int = 0) -> np.ndarray
         if len(live) == 1:
             recurse(live[0][0], mask)
             return
-        total_cap = sum(b.size for _, b in live)
+        total_cap = sum(cap_of(b) for _, b in live)
         total_w = float(g.node_weight[mask].sum())
         avail = mask.copy()
         for child, bins in live[:-1]:
-            target = total_w * bins.size / total_cap
+            target = total_w * cap_of(bins) / total_cap
             region = _greedy_grow(g, avail, target, rng)
             recurse(child, region)
             avail &= ~region

@@ -20,13 +20,14 @@ Two consumers (DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import objective
-from repro.core.topology import TreeTopology
+from repro.core.topology import RoutingTopology, Topology, TreeTopology
 from repro.graph.graph import Graph
 
 
@@ -175,9 +176,49 @@ def _traffic_edges(T: np.ndarray):
             jnp.asarray(np.concatenate([w[nz], w[nz]]).astype(np.float32)))
 
 
-def _device_map_breakdown(T: np.ndarray, topo: TreeTopology,
+def _routing_loads_batch(T: np.ndarray, topo: RoutingTopology,
+                         device_to_bin: np.ndarray) -> np.ndarray:
+    """[C, L] link loads of a batch of device->bin permutations under a
+    routing oracle: ``loads[c, l] = 0.5 Σ_ij T[i,j] R[d2b[i], d2b[j], l]``
+    (the permuted quotient pushed through the fractional path incidence).
+    Dense [k, k, L] gathers — small machine models only, chunked to bound
+    the materialized [C, D, D, L] slab."""
+    import jax.numpy as jnp
+    d2b = np.asarray(device_to_bin)
+    if d2b.ndim == 1:
+        d2b = d2b[None]
+    d = T.shape[0]
+    R = jnp.asarray(topo.path_incidence)
+    Tj = jnp.asarray(T, dtype=jnp.float32)
+    batched = _routing_scorer()
+    chunk = max(1, (1 << 24) // max(d * d * topo.n_links, 1))
+    out = [np.asarray(batched(Tj, R,
+                              jnp.asarray(d2b[lo:lo + chunk], jnp.int32)))
+           for lo in range(0, d2b.shape[0], chunk)]
+    return np.concatenate(out, axis=0)
+
+
+@functools.lru_cache(maxsize=1)
+def _routing_scorer():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def batched(Tj, R, rows):
+        def one(row):
+            return 0.5 * jnp.einsum("ij,ijl->l", Tj, R[row][:, row])
+        return jax.vmap(one)(rows)
+    return batched
+
+
+def _device_map_breakdown(T: np.ndarray, topo: Topology,
                           device_to_bin: np.ndarray, edges=None):
     import jax.numpy as jnp
+    if isinstance(topo, RoutingTopology):
+        loads = _routing_loads_batch(T, topo, device_to_bin)[0]
+        return objective.makespan_from_parts(
+            jnp.zeros(T.shape[0], dtype=jnp.float32),
+            jnp.asarray(loads, dtype=jnp.float32), jnp.asarray(topo.F_l))
     s2, r2, w2 = edges if edges is not None else _traffic_edges(T)
     return objective.makespan_tree(
         jnp.asarray(device_to_bin, dtype=jnp.int32), s2, r2, w2,
@@ -185,20 +226,39 @@ def _device_map_breakdown(T: np.ndarray, topo: TreeTopology,
         jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), k=topo.k)
 
 
-def makespan_of_device_map(T: np.ndarray, topo: TreeTopology,
+def makespan_of_device_map(T: np.ndarray, topo: Topology,
                            device_to_bin: np.ndarray) -> float:
     """Score a device->bin assignment: bottleneck link under traffic T.
     comp is uniform (SPMD: one shard per device), so the comm term decides."""
     return float(_device_map_breakdown(T, topo, device_to_bin).comm_max)
 
 
-def link_loads_of_device_map(T: np.ndarray, topo: TreeTopology,
+def capacity_makespan(T: np.ndarray, topo: Topology,
+                      device_to_bin: np.ndarray,
+                      shard_work: float = 0.0) -> float:
+    """Capacity-normalized makespan of a device->bin permutation:
+    ``max(max_b shard_work / speed(b), comm makespan)``. Under SPMD every
+    device carries one equal shard, so the comp term is
+    permutation-invariant — ``shard_work / min(speed)`` on a heterogeneous
+    machine (``topo.bin_speed``), ``shard_work`` on a uniform one — and
+    "searched <= identity" carries over from the comm term verbatim."""
+    comm = makespan_of_device_map(T, topo, device_to_bin)
+    speed = getattr(topo, "bin_speed", None)
+    if shard_work <= 0.0:
+        return comm
+    comp = (float(shard_work) if speed is None
+            else float(shard_work / np.asarray(speed).min()))
+    return max(comp, comm)
+
+
+def link_loads_of_device_map(T: np.ndarray, topo: Topology,
                              device_to_bin: np.ndarray) -> np.ndarray:
     """Raw (un-weighted by F_l) per-link byte loads of a device->bin
-    assignment, in ``topo.link_nodes`` order. The dry-run's mapping report
-    sums the entries whose link depth is 1 to get cross-pod (DCN) bytes.
-    Clamped at 0: the GEMM-based load algebra cancels to small negatives
-    (f32 rounding) on links that carry nothing."""
+    assignment, in ``topo.link_nodes`` order (routing topologies: link-id
+    order). The dry-run's mapping report sums the entries whose link depth
+    is 1 to get cross-pod (DCN) bytes. Clamped at 0: the GEMM-based load
+    algebra cancels to small negatives (f32 rounding) on links that carry
+    nothing."""
     comm = np.asarray(_device_map_breakdown(T, topo, device_to_bin).comm)
     return np.maximum(comm, 0.0)
 
@@ -305,7 +365,7 @@ def _make_scorer_ctx(T: np.ndarray, topo: TreeTopology) -> _ScorerCtx:
         n_pairs=int(nz.sum()))
 
 
-def score_device_maps(T: np.ndarray, topo: TreeTopology,
+def score_device_maps(T: np.ndarray, topo: Topology,
                       device_to_bin: np.ndarray, chunk: int = 128,
                       _ctx: Optional[_ScorerCtx] = None) -> np.ndarray:
     """Bottleneck cost of every candidate device->bin permutation. [C]
@@ -315,9 +375,14 @@ def score_device_maps(T: np.ndarray, topo: TreeTopology,
     ``objective.permutation_link_loads_batch`` — flat segment bucketing +
     two GEMMs against the subtree indicators — with a single host
     roundtrip, instead of one edge rebuild + ``makespan_tree`` call + sync
-    per candidate.
+    per candidate. Routing topologies (``core.machine`` torus presets)
+    take the dense oracle path instead of the tree-LCA identity.
     """
     import jax.numpy as jnp
+    if isinstance(topo, RoutingTopology):
+        loads = _routing_loads_batch(T, topo, np.asarray(device_to_bin))
+        return (loads * np.asarray(topo.F_l)[None, :]).max(
+            axis=1).astype(np.float64)
     c = int(np.asarray(device_to_bin).shape[0])
     ctx = _ctx or _make_scorer_ctx(np.asarray(T, dtype=np.float64), topo)
     if ctx.n_pairs == 0 or topo.n_links == 0:
@@ -374,14 +439,14 @@ def _refine_subtrees(T: np.ndarray, topo: TreeTopology, d2b: np.ndarray,
 
 def search_mesh_mapping(mesh_shape: Sequence[int],
                         axis_bytes: Dict[int, float],
-                        topo: TreeTopology,
+                        topo: Optional[Topology] = None,
                         max_axis_perms: Optional[int] = None,
                         traffic: Optional[np.ndarray] = None,
                         n_random: int = 0, seed: int = 0,
                         recursive: bool = False,
                         chunk: int = 128,
-                        warm_starts: Optional[Sequence[np.ndarray]] = None
-                        ) -> MeshMapping:
+                        warm_starts: Optional[Sequence[np.ndarray]] = None,
+                        machine=None) -> MeshMapping:
     """Enumerate logical-axis permutations x per-axis orders; return the
     assignment with the smallest bottleneck-link traffic cost.
 
@@ -405,9 +470,20 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
     permutation) to the candidate set — the recompile fixed-point loop
     (``launch.placement``) feeds each round's best order back in, so a
     later round can never regress below an earlier winner.
+
+    ``machine`` (a ``core.machine.MachineSpec``) supplies the topology
+    declaratively — ``machine.topology()`` — instead of an explicit
+    ``topo``; routing machines (torus presets) are scored through the
+    dense oracle path and skip the tree-only recursive pass.
     """
     shape = tuple(mesh_shape)
     d = int(np.prod(shape))
+    if topo is None:
+        if machine is None:
+            raise ValueError("search needs a topology: pass topo= or "
+                             "machine=")
+        topo = machine.topology()
+    is_tree = isinstance(topo, TreeTopology)
     if topo.k != d:
         raise ValueError(f"topology has {topo.k} bins, mesh has {d} devices")
     if traffic is not None:
@@ -429,7 +505,7 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
         cands = np.concatenate([cands, ws], axis=0)
         meta.extend((tuple(range(len(shape))), (-1,) * len(shape))
                     for _ in range(ws.shape[0]))
-    ctx = _make_scorer_ctx(T, topo)
+    ctx = _make_scorer_ctx(T, topo) if is_tree else None
     costs = score_device_maps(T, topo, cands, chunk=chunk, _ctx=ctx)
     # Shortlist + canonical re-score: selection ran on the batched f32
     # pipeline, but every consumer (the placement session, train's identity
@@ -437,21 +513,25 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
     # the two scorers can disagree by f32 rounding on near-ties. Re-scoring
     # the batched top candidates AND identity through the canonical path
     # makes the returned bottleneck comparable everywhere and keeps
-    # "searched <= identity" exact, not just up to scorer noise.
+    # "searched <= identity" exact, not just up to scorer noise. (Routing
+    # topologies have ONE scorer, so selection and canon already agree.)
     short = list(np.argsort(costs, kind="stable")[:8])
     if 0 not in short:
         short.append(0)                      # identity is always re-scored
     if ws_lo is not None:                    # ... and so is every warm start
         short.extend(j for j in range(ws_lo, cands.shape[0])
                      if j not in short)
-    edges = _traffic_edges(T)
-    canon = {int(j): float(_device_map_breakdown(T, topo, cands[j],
-                                                 edges).comm_max)
-             for j in short}
+    edges = _traffic_edges(T) if is_tree else None
+    if is_tree:
+        canon = {int(j): float(_device_map_breakdown(T, topo, cands[j],
+                                                     edges).comm_max)
+                 for j in short}
+    else:
+        canon = {int(j): float(costs[j]) for j in short}
     i = min(canon, key=lambda j: (canon[j], j))   # ties -> first candidate
     perm, orders_idx = meta[i]
     best_d2b, best_cost = cands[i], canon[i]
-    if recursive:
+    if recursive and is_tree:   # per-subtree pass is tree-only
         ref_d2b, _ = _refine_subtrees(T, topo, best_d2b, float(costs[i]),
                                       chunk, ctx)
         if not np.array_equal(ref_d2b, best_d2b):
@@ -465,22 +545,26 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
                        best_cost, n_candidates=int(cands.shape[0]))
 
 
-def search(mesh_shape: Sequence[int], topo: TreeTopology,
+def search(mesh_shape: Sequence[int], topo: Optional[Topology],
            traffic: np.ndarray, *,
            warm_starts: Optional[Sequence[np.ndarray]] = None,
            n_random: int = 0, seed: int = 0, recursive: bool = False,
            chunk: int = 128,
-           max_axis_perms: Optional[int] = None) -> MeshMapping:
+           max_axis_perms: Optional[int] = None,
+           machine=None) -> MeshMapping:
     """Placement-facing entry of the mesh-mapping search: measured traffic
     is mandatory (the session always has a compiled module in hand) and
     ``warm_starts`` carries the prior winner(s) of the recompile fixed-point
     loop, so each round's result is monotone vs every earlier round. Thin
-    keyword-only front to :func:`search_mesh_mapping`.
+    keyword-only front to :func:`search_mesh_mapping`; ``topo=None`` with
+    ``machine=`` (a ``core.machine.MachineSpec``) derives the topology
+    from the declarative machine model.
     """
     return search_mesh_mapping(mesh_shape, {}, topo, traffic=traffic,
                                warm_starts=warm_starts, n_random=n_random,
                                seed=seed, recursive=recursive, chunk=chunk,
-                               max_axis_perms=max_axis_perms)
+                               max_axis_perms=max_axis_perms,
+                               machine=machine)
 
 
 def expert_placement(traffic: np.ndarray, expert_flops: np.ndarray,

@@ -22,15 +22,26 @@ import jax.numpy as jnp
 
 class MakespanBreakdown(NamedTuple):
     makespan: jnp.ndarray      # scalar
-    comp: jnp.ndarray          # [k] per-bin compute loads
+    comp: jnp.ndarray          # [k] per-bin compute loads (speed-normalized
+    #                            when the machine is heterogeneous)
     comm: jnp.ndarray          # [L] per-link communication volumes
     comp_max: jnp.ndarray
     comm_max: jnp.ndarray      # max_l F_l * comm(l)
 
 
-def comp_loads(part: jnp.ndarray, node_weight: jnp.ndarray, k: int) -> jnp.ndarray:
-    """comp(b): sum of vertex weights mapped to each bin. [k]"""
-    return jax.ops.segment_sum(node_weight, part, num_segments=k)
+def comp_loads(part: jnp.ndarray, node_weight: jnp.ndarray, k: int,
+               speed: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """comp(b): sum of vertex weights mapped to each bin. [k]
+
+    ``speed`` (relative per-bin compute speeds, fastest = 1.0) switches to
+    the capacity-normalized load ``comp(b) / speed(b)`` — the paper's
+    load-balanced bottleneck objective for heterogeneous PEs: a slow bin
+    carrying the same weight is a worse bottleneck. ``speed=None`` is the
+    exact uniform-machine path (no division)."""
+    comp = jax.ops.segment_sum(node_weight, part, num_segments=k)
+    if speed is not None:
+        comp = comp / speed
+    return comp
 
 
 def quotient_matrix(part: jnp.ndarray, senders: jnp.ndarray, receivers: jnp.ndarray,
@@ -78,9 +89,12 @@ def makespan_from_parts(comp: jnp.ndarray, comm: jnp.ndarray, F_l: jnp.ndarray,
 @functools.partial(jax.jit, static_argnames=("k",))
 def makespan_tree(part: jnp.ndarray, senders: jnp.ndarray, receivers: jnp.ndarray,
                   edge_weight: jnp.ndarray, node_weight: jnp.ndarray,
-                  subtree: jnp.ndarray, F_l: jnp.ndarray, k: int) -> MakespanBreakdown:
-    """M(P) for a tree topology. ``part[v]`` is a compute-bin index in [0, k)."""
-    comp = comp_loads(part, node_weight, k)
+                  subtree: jnp.ndarray, F_l: jnp.ndarray, k: int,
+                  speed: Optional[jnp.ndarray] = None) -> MakespanBreakdown:
+    """M(P) for a tree topology. ``part[v]`` is a compute-bin index in [0, k).
+    ``speed`` normalizes bin loads to ``comp(b)/speed(b)`` (heterogeneous
+    PEs; the breakdown's ``comp`` is then the normalized load)."""
+    comp = comp_loads(part, node_weight, k, speed)
     W = quotient_matrix(part, senders, receivers, edge_weight, k)
     comm = link_loads_tree(W, subtree)
     return makespan_from_parts(comp, comm, F_l)
@@ -90,8 +104,9 @@ def makespan_tree(part: jnp.ndarray, senders: jnp.ndarray, receivers: jnp.ndarra
 def makespan_routing(part: jnp.ndarray, senders: jnp.ndarray, receivers: jnp.ndarray,
                      edge_weight: jnp.ndarray, node_weight: jnp.ndarray,
                      path_incidence: jnp.ndarray, F_l: jnp.ndarray,
-                     k: int) -> MakespanBreakdown:
-    comp = comp_loads(part, node_weight, k)
+                     k: int, speed: Optional[jnp.ndarray] = None
+                     ) -> MakespanBreakdown:
+    comp = comp_loads(part, node_weight, k, speed)
     W = quotient_matrix(part, senders, receivers, edge_weight, k)
     comm = link_loads_routing(W, path_incidence)
     return makespan_from_parts(comp, comm, F_l)
@@ -171,13 +186,16 @@ def permutation_link_loads_batch(device_to_bin: jnp.ndarray,
 def makespan_tree_batch(parts: jnp.ndarray, senders: jnp.ndarray,
                         receivers: jnp.ndarray, edge_weight: jnp.ndarray,
                         node_weight: jnp.ndarray, subtree: jnp.ndarray,
-                        F_l: jnp.ndarray, k: int) -> MakespanBreakdown:
+                        F_l: jnp.ndarray, k: int,
+                        speed: Optional[jnp.ndarray] = None
+                        ) -> MakespanBreakdown:
     """``vmap(makespan_tree)`` over a ``[C, n]`` batch of assignments — the
     general-graph fallback for candidate sets that are not permutations of
-    the traffic matrix (arbitrary graphs, non-bijective maps)."""
+    the traffic matrix (arbitrary graphs, non-bijective maps). ``speed``
+    (shared across candidates) normalizes bin loads."""
     def one(p):
         return makespan_tree(p, senders, receivers, edge_weight, node_weight,
-                             subtree, F_l, k=k)
+                             subtree, F_l, k=k, speed=speed)
     return jax.vmap(one)(parts)
 
 
@@ -203,23 +221,32 @@ def comm_volumes(part: jnp.ndarray, senders: jnp.ndarray, receivers: jnp.ndarray
 
 
 def soft_cost(comp: jnp.ndarray, comm: jnp.ndarray, F_l: jnp.ndarray,
-              temp: jnp.ndarray) -> jnp.ndarray:
+              temp: jnp.ndarray,
+              speed: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Smoothed bottleneck potential: temperature-scaled logsumexp over all
     load terms. -> true max as temp -> 0. Differentiable everywhere; its
     gradient concentrates weight on near-bottleneck bins/links, which is what
-    the refinement prices moves with."""
-    loads = jnp.concatenate([comp, F_l * comm])
+    the refinement prices moves with. ``comp`` is the RAW per-bin load;
+    ``speed`` folds in the capacity normalization ``comp/speed``."""
+    comp_n = comp if speed is None else comp / speed
+    loads = jnp.concatenate([comp_n, F_l * comm])
     scale = jnp.maximum(jax.lax.stop_gradient(loads).max(), 1e-9)
     z = loads / (scale * jnp.maximum(temp, 1e-6))
     return jax.nn.logsumexp(z) * scale * jnp.maximum(temp, 1e-6)
 
 
 def load_gradients(comp: jnp.ndarray, comm: jnp.ndarray, F_l: jnp.ndarray,
-                   temp: jnp.ndarray):
-    """(g_comp [k], g_link [L]): d soft_cost / d load. Softmax weights —
-    computed in closed form (cheaper than jax.grad and used inside scans)."""
-    loads = jnp.concatenate([comp, F_l * comm])
+                   temp: jnp.ndarray, speed: Optional[jnp.ndarray] = None):
+    """(g_comp [k], g_link [L]): d soft_cost / d RAW load. Softmax weights —
+    computed in closed form (cheaper than jax.grad and used inside scans).
+    With ``speed``, d soft/d comp(b) picks up the chain-rule 1/speed(b):
+    adding weight to a slow bin is priced proportionally higher, which is
+    all the refinement needs to balance a heterogeneous machine — the gain
+    formulas downstream stay written in raw vertex weight."""
+    comp_n = comp if speed is None else comp / speed
+    loads = jnp.concatenate([comp_n, F_l * comm])
     scale = jnp.maximum(loads.max(), 1e-9)
     w = jax.nn.softmax(loads / (scale * jnp.maximum(temp, 1e-6)))
     k = comp.shape[0]
-    return w[:k], w[k:] * F_l
+    g_comp = w[:k] if speed is None else w[:k] / speed
+    return g_comp, w[k:] * F_l

@@ -43,7 +43,7 @@ class PartitionConfig:
 class PartitionResult:
     part: np.ndarray                # [n] bin per vertex
     makespan: float
-    comp: np.ndarray                # [k]
+    comp: np.ndarray                # [k] (comp/speed when topo.bin_speed set)
     comm: np.ndarray                # [L]
     comp_max: float
     comm_max: float
@@ -54,11 +54,13 @@ class PartitionResult:
 
 def _evaluate(g: Graph, topo: TreeTopology, part: np.ndarray) -> PartitionResult:
     import jax.numpy as jnp
+    speed = (None if topo.bin_speed is None
+             else jnp.asarray(topo.bin_speed, dtype=jnp.float32))
     br = objective.makespan_tree(
         jnp.asarray(part, dtype=jnp.int32), jnp.asarray(g.senders),
         jnp.asarray(g.receivers), jnp.asarray(g.edge_weight),
         jnp.asarray(g.node_weight), jnp.asarray(topo.subtree),
-        jnp.asarray(topo.F_l), k=topo.k)
+        jnp.asarray(topo.F_l), k=topo.k, speed=speed)
     W = objective.quotient_matrix(
         jnp.asarray(part, dtype=jnp.int32), jnp.asarray(g.senders),
         jnp.asarray(g.receivers), jnp.asarray(g.edge_weight), topo.k)

@@ -36,11 +36,23 @@ def tree_path_links(topo: TreeTopology, a_bin: int, b_bin: int) -> list:
     return [link_of[x] for x in nodes]
 
 
-def makespan_ref(part: np.ndarray, g: Graph, topo: TreeTopology) -> Tuple[float, np.ndarray, np.ndarray]:
-    """(makespan, comp[k], comm[L]) by explicit path walking."""
+def makespan_ref(part: np.ndarray, g: Graph, topo: TreeTopology,
+                 speed: Optional[np.ndarray] = None
+                 ) -> Tuple[float, np.ndarray, np.ndarray]:
+    """(makespan, comp[k], comm[L]) by explicit path walking.
+
+    ``speed`` (or ``topo.bin_speed`` when unset) normalizes bin loads to
+    ``comp(b)/speed(b)`` — the heterogeneous-PE objective; the returned
+    ``comp`` is then the normalized load, matching
+    ``objective.makespan_tree``'s breakdown. ``speed=None`` on a speed-free
+    topology is the exact uniform path (no division anywhere)."""
     part = np.asarray(part)
+    if speed is None:
+        speed = topo.bin_speed
     comp = np.zeros(topo.k)
     np.add.at(comp, part, g.node_weight)
+    if speed is not None:
+        comp = comp / np.asarray(speed, dtype=comp.dtype)
     comm = np.zeros(topo.n_links)
     seen = g.senders < g.receivers
     for u, v, w in zip(g.senders[seen], g.receivers[seen], g.edge_weight[seen]):

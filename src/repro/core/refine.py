@@ -79,25 +79,30 @@ def price_matrix(g_link: jnp.ndarray, subtree: jnp.ndarray) -> jnp.ndarray:
     return u[:, None] + u[None, :] - 2.0 * cross
 
 
-def _prices(comp, comm, F_l, temp):
-    g_comp, g_link = objective.load_gradients(comp, comm, F_l, temp)
+def _prices(comp, comm, F_l, temp, speed=None):
+    g_comp, g_link = objective.load_gradients(comp, comm, F_l, temp, speed)
     return g_comp, g_link
 
 
 def _apply_moves(part, cand, gain, node_weight, comp, key, k, damping,
-                 inflow_slack):
+                 inflow_slack, speed=None):
     """Damped, inflow-capped application of positive-gain moves.
 
     A move is attempted with probability ``damping``; per destination bin,
     attempted inflow is capped so the bin does not blow past the current
-    bottleneck (+slack) — stochastic thinning by the cap ratio.
+    bottleneck (+slack) — stochastic thinning by the cap ratio. With per-bin
+    ``speed`` the cap runs in capacity-normalized units (``comp/speed``,
+    inflow weighted by 1/speed of the destination): a slow bin fills up
+    proportionally sooner.
     """
     k_gate, k_thin = jax.random.split(key)
     want = (gain > 0) & (cand != part)
     want &= jax.random.uniform(k_gate, part.shape) < damping
+    w_eff = node_weight if speed is None else node_weight / speed[cand]
+    comp_n = comp if speed is None else comp / speed
     inflow = jax.ops.segment_sum(
-        jnp.where(want, node_weight, 0.0), cand, num_segments=k)
-    cap = jnp.maximum(comp.max() * (1.0 + inflow_slack) - comp, 0.0)
+        jnp.where(want, w_eff, 0.0), cand, num_segments=k)
+    cap = jnp.maximum(comp_n.max() * (1.0 + inflow_slack) - comp_n, 0.0)
     ratio = jnp.where(inflow > 0, jnp.minimum(cap / jnp.maximum(inflow, 1e-9), 1.0), 0.0)
     keep = want & (jax.random.uniform(k_thin, part.shape) < ratio[cand])
     moved = keep.sum()
@@ -109,11 +114,14 @@ def _apply_moves(part, cand, gain, node_weight, comp, key, k, damping,
 # ---------------------------------------------------------------------------
 
 def _dense_round(part, senders, receivers, edge_weight, node_weight,
-                 subtree, F_l, k, temp, key, damping, inflow_slack):
+                 subtree, F_l, k, temp, key, damping, inflow_slack,
+                 speed=None):
     comp = objective.comp_loads(part, node_weight, k)
     W = objective.quotient_matrix(part, senders, receivers, edge_weight, k)
     comm = objective.link_loads_tree(W, subtree)
-    g_comp, g_link = _prices(comp, comm, F_l, temp)
+    # g_comp prices RAW load (1/speed folded in by load_gradients), so the
+    # gain formula below is unchanged on heterogeneous machines
+    g_comp, g_link = _prices(comp, comm, F_l, temp, speed)
     pi = price_matrix(g_link, subtree)
 
     conn = kops.partition_gain(part, senders, receivers, edge_weight, k)
@@ -126,7 +134,7 @@ def _dense_round(part, senders, receivers, edge_weight, node_weight,
     cand = jnp.argmax(gain, axis=1).astype(part.dtype)
     best_gain = jnp.take_along_axis(gain, cand[:, None].astype(jnp.int32), axis=1)[:, 0]
     return _apply_moves(part, cand, best_gain, node_weight, comp, key, k,
-                        damping, inflow_slack)
+                        damping, inflow_slack, speed)
 
 
 # ---------------------------------------------------------------------------
@@ -169,12 +177,12 @@ def _sample_candidates(part, senders, receivers, edge_weight, offsets_pad,
 
 def _sparse_round(part, senders, receivers, edge_weight, node_weight,
                   offsets_pad, degrees, subtree, F_l, k, temp, key, mode,
-                  damping, inflow_slack):
+                  damping, inflow_slack, speed=None):
     n = part.shape[0]
     comp = objective.comp_loads(part, node_weight, k)
     W = objective.quotient_matrix(part, senders, receivers, edge_weight, k)
     comm = objective.link_loads_tree(W, subtree)
-    g_comp, g_link = _prices(comp, comm, F_l, temp)
+    g_comp, g_link = _prices(comp, comm, F_l, temp, speed)
     pi = price_matrix(g_link, subtree)
 
     k_cand, k_move = jax.random.split(key)
@@ -190,7 +198,7 @@ def _sparse_round(part, senders, receivers, edge_weight, node_weight,
                                     num_segments=n)
     gain = gain_comm + node_weight * (g_comp[part] - g_comp[cand])
     return _apply_moves(part, cand, gain, node_weight, comp, k_move, k,
-                        damping, inflow_slack)
+                        damping, inflow_slack, speed)
 
 
 # ---------------------------------------------------------------------------
@@ -198,23 +206,26 @@ def _sparse_round(part, senders, receivers, edge_weight, node_weight,
 # ---------------------------------------------------------------------------
 
 def _refine_core(part0, senders, receivers, edge_weight, node_weight,
-                 offsets_pad, degrees, subtree, F_l, key, *, k, rounds, dense,
-                 damping, temp0, temp_min, anneal, inflow_slack):
+                 offsets_pad, degrees, subtree, F_l, key, speed=None, *,
+                 k, rounds, dense, damping, temp0, temp_min, anneal,
+                 inflow_slack):
     def body(state: RefineState, ridx):
         key, sub = jax.random.split(state.key)
         if dense:
             part, moved = _dense_round(
                 state.part, senders, receivers, edge_weight, node_weight,
-                subtree, F_l, k, state.temp, sub, damping, inflow_slack)
+                subtree, F_l, k, state.temp, sub, damping, inflow_slack,
+                speed)
         else:
             mode = ridx % 3
             part, moved = _sparse_round(
                 state.part, senders, receivers, edge_weight, node_weight,
                 offsets_pad, degrees, subtree, F_l, k, state.temp, sub, mode,
-                damping, inflow_slack)
+                damping, inflow_slack, speed)
         # one breakdown per round: acceptance and stats share it
         br = objective.makespan_tree(part, senders, receivers, edge_weight,
-                                     node_weight, subtree, F_l, k=k)
+                                     node_weight, subtree, F_l, k=k,
+                                     speed=speed)
         m = br.makespan
         better = m < state.best_m
         best_part = jnp.where(better, part, state.best_part)
@@ -224,7 +235,8 @@ def _refine_core(part0, senders, receivers, edge_weight, node_weight,
         return RefineState(part, best_part, best_m, temp, key), stats
 
     m0 = objective.makespan_tree(part0, senders, receivers, edge_weight,
-                                 node_weight, subtree, F_l, k=k).makespan
+                                 node_weight, subtree, F_l, k=k,
+                                 speed=speed).makespan
     init = RefineState(part0, part0, m0, jnp.float32(temp0), key)
     final, stats = jax.lax.scan(body, init, jnp.arange(rounds))
     return final.best_part, final.best_m, stats
@@ -237,12 +249,13 @@ _refine_jit = functools.partial(jax.jit, static_argnames=_STATIC)(_refine_core)
 
 @functools.partial(jax.jit, static_argnames=_STATIC)
 def _refine_batch_jit(parts0, senders, receivers, edge_weight, node_weight,
-                      offsets_pad, degrees, subtree, F_l, keys, *, k, rounds,
-                      dense, damping, temp0, temp_min, anneal, inflow_slack):
+                      offsets_pad, degrees, subtree, F_l, keys, speed=None,
+                      *, k, rounds, dense, damping, temp0, temp_min, anneal,
+                      inflow_slack):
     def one(p0, key):
         return _refine_core(p0, senders, receivers, edge_weight, node_weight,
-                            offsets_pad, degrees, subtree, F_l, key, k=k,
-                            rounds=rounds, dense=dense, damping=damping,
+                            offsets_pad, degrees, subtree, F_l, key, speed,
+                            k=k, rounds=rounds, dense=dense, damping=damping,
                             temp0=temp0, temp_min=temp_min, anneal=anneal,
                             inflow_slack=inflow_slack)
     return jax.vmap(one)(parts0, keys)
@@ -253,19 +266,24 @@ def refine(g: Graph, topo: TreeTopology, part: np.ndarray,
     """Refine ``part`` on graph ``g`` over machine tree ``topo``.
 
     Returns (best partition, best makespan, per-round stats). Pure function
-    of its inputs — does not mutate ``part``.
+    of its inputs — does not mutate ``part``. ``topo.bin_speed`` (set by
+    ``core.machine.MachineSpec`` on heterogeneous machines) switches the
+    whole loop — prices, inflow caps, acceptance — to the
+    capacity-normalized objective ``max(comp/speed, F_l·comm)``.
     """
     cfg = cfg or RefineConfig()
     k = topo.k
     dense = g.n_nodes * k <= cfg.dense_threshold
     key = jax.random.PRNGKey(cfg.seed)
+    speed = (None if topo.bin_speed is None
+             else jnp.asarray(topo.bin_speed, dtype=jnp.float32))
     best_part, best_m, stats = _refine_jit(
         jnp.asarray(part, dtype=jnp.int32),
         jnp.asarray(g.senders), jnp.asarray(g.receivers),
         jnp.asarray(g.edge_weight), jnp.asarray(g.node_weight),
         jnp.asarray(g.offsets[:-1], dtype=jnp.int32),
         jnp.asarray(g.degrees(), dtype=jnp.int32),
-        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), key,
+        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), key, speed,
         k=k, rounds=cfg.rounds, dense=bool(dense), damping=cfg.damping,
         temp0=cfg.temp0, temp_min=cfg.temp_min, anneal=cfg.anneal,
         inflow_slack=cfg.inflow_slack)
@@ -292,13 +310,15 @@ def refine_batch(g: Graph, topo: TreeTopology, parts: np.ndarray,
     dense = g.n_nodes * k <= cfg.dense_threshold
     keys = jnp.stack([jax.random.PRNGKey(cfg.seed + i)
                       for i in range(parts.shape[0])])
+    speed = (None if topo.bin_speed is None
+             else jnp.asarray(topo.bin_speed, dtype=jnp.float32))
     best_parts, best_ms, stats = _refine_batch_jit(
         jnp.asarray(parts, dtype=jnp.int32),
         jnp.asarray(g.senders), jnp.asarray(g.receivers),
         jnp.asarray(g.edge_weight), jnp.asarray(g.node_weight),
         jnp.asarray(g.offsets[:-1], dtype=jnp.int32),
         jnp.asarray(g.degrees(), dtype=jnp.int32),
-        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), keys,
+        jnp.asarray(topo.subtree), jnp.asarray(topo.F_l), keys, speed,
         k=k, rounds=cfg.rounds, dense=bool(dense), damping=cfg.damping,
         temp0=cfg.temp0, temp_min=cfg.temp_min, anneal=cfg.anneal,
         inflow_slack=cfg.inflow_slack)

@@ -14,7 +14,7 @@ path-incidence tensor ``R[i, j, l]`` (small bin counts only).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -38,6 +38,11 @@ class TreeTopology:
     subtree: np.ndarray       # [n_links, k] float32 indicator
     link_nodes: np.ndarray    # [n_links] child-node id of each link
     F_l: np.ndarray           # [n_links] float32 per-link cost factors
+    # Heterogeneous PEs (core/machine.py): relative per-bin compute speed.
+    # None = uniform machine, the exact historical code path; when set, the
+    # objective normalizes bin loads to comp(b)/speed(b) (the paper's
+    # load-balanced bottleneck objective for heterogeneous processors).
+    bin_speed: Optional[np.ndarray] = None  # [k] float32, fastest = 1.0
 
     @property
     def n_nodes(self) -> int:
@@ -152,6 +157,19 @@ def make_tree(parent: Sequence[int], is_router: Optional[Sequence[bool]] = None,
     )
 
 
+def with_bin_speed(topo: TreeTopology, speed: Sequence[float]) -> TreeTopology:
+    """Attach relative per-bin compute speeds to a tree (heterogeneous
+    PEs). Speeds are normalized so the fastest bin is 1.0 — ``comp(b) /
+    speed(b)`` then stays in the same units as the uniform objective."""
+    s = np.asarray(speed, dtype=np.float32)
+    if s.shape != (topo.k,):
+        raise ValueError(f"speed has shape {s.shape}, topology has "
+                         f"{topo.k} bins")
+    if not (s > 0).all():
+        raise ValueError("bin speeds must be positive")
+    return dataclasses.replace(topo, bin_speed=s / s.max())
+
+
 def flat_topology(k: int, F: float = 1.0) -> TreeTopology:
     """Star: one router root, k compute leaves. Equivalent to classic k-way
     partitioning where comm(l) is the communication volume of bin l."""
@@ -247,6 +265,11 @@ class RoutingTopology:
 
     def distance_matrix(self) -> np.ndarray:
         return np.einsum("ijl,l->ij", self.path_incidence, self.F_l)
+
+
+# A machine graph the objective/mapping layers can score: the tree
+# identity path or the dense routing-oracle path (small bin counts).
+Topology = Union[TreeTopology, RoutingTopology]
 
 
 def routing_from_paths(k: int, n_links: int,

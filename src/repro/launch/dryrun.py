@@ -3,10 +3,17 @@
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
-        --shape train_4k [--multi-pod] [--out results/dryrun] \
-        [--profile 2d|fsdp|sp|expert] [--topology-aware] [--recompile]
+        --shape train_4k [--multi-pod] [--machine <preset>] \
+        [--out results/dryrun] [--profile 2d|fsdp|sp|expert] \
+        [--topology-aware] [--recompile]
     PYTHONPATH=src python -m repro.launch.dryrun --all
     PYTHONPATH=src python -m repro.launch.dryrun --mapping-grid
+
+``--machine`` names a ``core.machine.MachineSpec`` preset (tpu_v5e-256/
+tpu_v5e-512/gpu-superpod/torus-2d/tpu-mixed-32/...): mesh shape, axes,
+scored topology and per-leaf roofline capacities all come from the spec —
+heterogeneous machines report the slowest-bin-bound terms plus a per-bin
+range (DESIGN.md §Machine-models).
 
 Methodology (EXPERIMENTS.md §Roofline records the same):
   * collective bytes — parsed from the compiled SPMD module text by
@@ -50,6 +57,7 @@ import jax                 # noqa: E402
 import numpy as np         # noqa: E402
 
 from repro import configs                  # noqa: E402
+from repro.core import machine as machine_lib  # noqa: E402
 from repro.launch import hlo_cost          # noqa: E402
 from repro.launch import mesh as mesh_lib  # noqa: E402
 from repro.launch import placement         # noqa: E402
@@ -121,17 +129,32 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
              overrides: Optional[Dict] = None,
              topology_aware: bool = False, map_restarts: int = 32,
              recompile: bool = False,
-             session: Optional[placement.PlacementSession] = None) -> Dict:
+             session: Optional[placement.PlacementSession] = None,
+             machine=None) -> Dict:
     """One (arch x shape x mesh) cell through the placement session:
     compile (or cache-hit), extract roofline terms, and — with
     ``topology_aware`` — run the searched-vs-identity mapping comparison,
     recompiling under the searched order when ``recompile`` is set.
+
+    ``machine`` (MachineSpec or ``--machine`` preset name) selects the
+    machine model; default is the TPU production preset named by
+    ``multi_pod``. Roofline terms are sized per leaf, so a heterogeneous
+    machine reports the binding (slowest-bin) time plus the per-bin range.
     """
     arch = configs.get(arch_name)
     shape = arch.shapes[shape_name]
-    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    spec = (machine_lib.resolve(machine)
+            or mesh_lib.production_machine(multi_pod))
+    # mesh tag keys the emitted filename: the TPU production presets keep
+    # the historical shape tags, every other machine tags by NAME so two
+    # presets sharing a mesh shape (gpu-superpod / torus-2d, both 8x8)
+    # cannot overwrite each other's results
+    mesh_tag = ("x".join(str(s) for s in spec.mesh_shape)
+                if spec.name in ("tpu_v5e-256", "tpu_v5e-512")
+                else spec.name)
     result: Dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_tag,
-                    "kind": shape.kind, "tag": tag, "profile": profile}
+                    "machine": spec.name, "kind": shape.kind, "tag": tag,
+                    "profile": profile}
     if shape.kind == "skip":
         result["status"] = "skip"
         result["reason"] = shape.skip_reason
@@ -140,21 +163,20 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     session = session or placement.PlacementSession(
         map_restarts=map_restarts)
     topology_aware = topology_aware or recompile   # recompile implies it
-    mesh_shape, _axes = mesh_lib.production_mesh_spec(multi_pod)
-    chips = int(np.prod(mesh_shape))
+    chips = spec.n_devices
 
     # production compile: collectives + memory + proof of compilability
     prod_overrides = dict(overrides or {})
     if arch.family == "lm" and shape.kind in ("train", "prefill"):
         prod_overrides.setdefault("q_chunk", 0)  # single q block (see doc)
     if topology_aware:
-        res = session.place(arch_name, shape_name, multi_pod=multi_pod,
+        res = session.place(arch_name, shape_name, machine=spec,
                             profile=profile, grad_compress=grad_compress,
                             overrides=prod_overrides, recompile=recompile)
         rec = res.record
         result["mapping"] = dataclasses.asdict(res.report)
     else:
-        rec = session.measure(arch_name, shape_name, multi_pod=multi_pod,
+        rec = session.measure(arch_name, shape_name, machine=spec,
                               profile=profile, grad_compress=grad_compress,
                               overrides=prod_overrides)
     cal, bytes_deep = rec.hlo_cal, rec.bytes_deep
@@ -177,13 +199,27 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     link_dev = float(sum(rec.link_bf16.values()))
     model_fl = arch.model_flops(shape.name)
 
-    compute_s = flops_dev / mesh_lib.PEAK_FLOPS
-    memory_s = bytes_dev / mesh_lib.HBM_BW
-    collective_s = link_dev / mesh_lib.ICI_BW
+    # per-leaf roofline: SPMD shards are equal, so a bin's time is the
+    # shard cost over ITS capacity and the step is bound by the slowest
+    # bin — on uniform machines this is exactly the historical scalar
+    compute_s_bins = flops_dev / spec.peak_flops
+    memory_s_bins = bytes_dev / spec.hbm_bw
+    compute_s = float(compute_s_bins.max())
+    memory_s = float(memory_s_bins.max())
+    collective_s = link_dev / spec.link_bw
     terms = {"compute_s": compute_s, "memory_s": memory_s,
              "collective_s": collective_s}
     dominant = max(terms, key=terms.get)
     bound = max(terms.values())
+    if spec.heterogeneous:
+        result["roofline_per_bin"] = {
+            "compute_s_min": float(compute_s_bins.min()),
+            "compute_s_max": compute_s,
+            "memory_s_min": float(memory_s_bins.min()),
+            "memory_s_max": memory_s,
+            "slowest_bin": int(np.argmax(
+                np.maximum(compute_s_bins, memory_s_bins))),
+        }
     result.update({
         "status": "ok",
         "chips": chips,
@@ -232,11 +268,13 @@ def _report_of(result: Dict) -> placement.PlacementReport:
 def mapping_grid(arch_names: List[str], shape_name: str, out_dir: str,
                  overrides: Optional[Dict] = None,
                  map_restarts: int = 32, recompile: bool = False,
-                 session: Optional[placement.PlacementSession] = None) -> int:
+                 session: Optional[placement.PlacementSession] = None,
+                 machine=None) -> int:
     """Searched-vs-identity mapping comparison over each arch's sharding
-    profiles on the multi-pod mesh, one shared placement session for the
-    whole sweep (repeat invocations hit the compiled-cell cache; the table
-    lands in EXPERIMENTS.md). Returns the failure count.
+    profiles on the multi-pod mesh (or ``--machine`` preset), one shared
+    placement session for the whole sweep (repeat invocations hit the
+    compiled-cell cache; the table lands in EXPERIMENTS.md). Returns the
+    failure count.
     """
     session = session or placement.PlacementSession(
         map_restarts=map_restarts)
@@ -249,7 +287,8 @@ def mapping_grid(arch_names: List[str], shape_name: str, out_dir: str,
                              out_dir=out_dir, tag=f"map_{profile}",
                              profile=profile, overrides=overrides,
                              topology_aware=True, map_restarts=map_restarts,
-                             recompile=recompile, session=session)
+                             recompile=recompile, session=session,
+                             machine=machine)
                 if r["status"] != "ok":
                     print(f"[SKIP] {arch_name}/{shape_name}/{profile}: "
                           f"{r.get('reason', '')[:60]}", flush=True)
@@ -277,6 +316,10 @@ def main() -> None:
     ap.add_argument("--shape")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--machine", default=None,
+                    help="machine-model preset (core.machine registry: "
+                         + ", ".join(machine_lib.MachineSpec.presets())
+                         + "); overrides --multi-pod/--single-pod")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
@@ -318,12 +361,15 @@ def main() -> None:
     session = placement.PlacementSession(cache_dir=args.cache_dir,
                                          map_restarts=args.map_restarts)
 
+    machine = machine_lib.resolve(args.machine)
+
     if args.mapping_grid:
         archs = [args.arch] if args.arch else ["qwen2-1.5b",
                                                "deepseek-v2-lite-16b"]
         failures = mapping_grid(archs, args.shape or "train_4k", args.out,
                                 overrides, map_restarts=args.map_restarts,
-                                recompile=args.recompile, session=session)
+                                recompile=args.recompile, session=session,
+                                machine=machine)
         if failures:
             raise SystemExit(f"{failures} mapping-grid cells failed")
         return
@@ -335,6 +381,8 @@ def main() -> None:
         meshes.append(True)
     if args.all:
         meshes = [False, True]
+    if machine is not None:
+        meshes = [False]          # the preset decides the mesh, not the flag
 
     cells: List[Tuple[str, str]] = []
     if args.all:
@@ -348,14 +396,16 @@ def main() -> None:
     failures = 0
     for arch_name, shape_name in cells:
         for mp in meshes:
-            mesh_tag = "2x16x16" if mp else "16x16"
+            mesh_tag = (machine.name if machine is not None
+                        else ("2x16x16" if mp else "16x16"))
             try:
                 r = run_cell(arch_name, shape_name, mp, args.out,
                              grad_compress=grad_compress, tag=args.tag,
                              profile=args.profile, overrides=overrides,
                              topology_aware=topology_aware,
                              map_restarts=args.map_restarts,
-                             recompile=args.recompile, session=session)
+                             recompile=args.recompile, session=session,
+                             machine=machine)
                 if r["status"] == "skip":
                     print(f"[SKIP] {arch_name}/{shape_name}/{mesh_tag}: "
                           f"{r['reason'][:60]}", flush=True)

@@ -46,6 +46,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import mapping, topology
+from repro.core import machine as machine_lib
+from repro.core.machine import MachineSpec
 from repro.launch import hlo_cost
 from repro.launch import mesh as mesh_lib
 from repro.launch.collectives import parse_collectives
@@ -202,18 +204,28 @@ class PlacementResult:
 # Side metrics + schedule diff
 # ---------------------------------------------------------------------------
 
+def _link_depths(topo) -> Optional[np.ndarray]:
+    """Tree-link depths (1 = cross-pod DCN), or None for routing
+    topologies, whose links have no tree depth — their dcn_bytes report
+    as 0."""
+    if not isinstance(topo, topology.TreeTopology):
+        return None
+    return np.asarray([topo.depth(int(c)) for c in topo.link_nodes])
+
+
 def _side_metrics(traffic: np.ndarray, topo, device_to_bin: np.ndarray,
                   depths: Optional[np.ndarray] = None) -> Dict[str, float]:
     """The paper's three observables of one placement under one measured
     schedule: F_l-weighted makespan, raw bottleneck-link bytes, and the
     bytes crossing the depth-1 (cross-pod DCN) tree links."""
     if depths is None:
-        depths = np.asarray([topo.depth(int(c)) for c in topo.link_nodes])
+        depths = _link_depths(topo)
     f_l = np.asarray(topo.F_l)
     loads = mapping.link_loads_of_device_map(traffic, topo, device_to_bin)
     return {"makespan": float((f_l * loads).max()),
             "bottleneck_link_bytes": float(loads.max()),
-            "dcn_bytes": float(loads[depths == 1].sum())}
+            "dcn_bytes": (float(loads[depths == 1].sum())
+                          if depths is not None else 0.0)}
 
 
 def schedule_diff(identity_rec: CellRecord, searched_rec: CellRecord,
@@ -229,7 +241,7 @@ def schedule_diff(identity_rec: CellRecord, searched_rec: CellRecord,
     under identical orders diff to exactly zero everywhere
     (``max_abs_delta == 0``), which pins compile determinism in tests.
     """
-    depths = np.asarray([topo.depth(int(c)) for c in topo.link_nodes])
+    depths = _link_depths(topo)
     side_i = _side_metrics(identity_rec.traffic, topo,
                            np.asarray(identity_order), depths)
     side_s = _side_metrics(searched_rec.traffic, topo,
@@ -272,15 +284,23 @@ class PlacementSession:
     in-memory only. ``map_restarts``/``recursive``/``seed`` parameterize
     every search the session runs; ``max_rounds`` bounds the recompile
     fixed-point loop.
+
+    ``machine`` (a ``core.machine.MachineSpec`` or preset name) is the
+    session's default machine model: it supplies mesh shape/axes, the
+    scored topology and the cache-key token for every ``measure``/``place``
+    that does not name one explicitly. Without it, the historical
+    ``multi_pod`` flag selects the TPU production presets.
     """
 
     def __init__(self, cache_dir: Optional[str] = None,
                  map_restarts: int = 32, recursive: bool = True,
                  seed: int = 0, max_rounds: int = 2,
-                 min_gain: float = 1e-3, verbose: bool = False):
+                 min_gain: float = 1e-3, verbose: bool = False,
+                 machine: Optional[Any] = None):
         if cache_dir is None:
             cache_dir = os.environ.get(_CACHE_ENV, _DEFAULT_CACHE_DIR)
         self.cache_dir = cache_dir
+        self.machine = machine_lib.resolve(machine)
         self.map_restarts = map_restarts
         self.recursive = recursive
         self.seed = seed
@@ -317,11 +337,36 @@ class PlacementSession:
         shape, axes = mesh_lib.serving_mesh_spec()
         return self.build_mesh(shape, axes, device_order)
 
+    # -- machine resolution ------------------------------------------------
+
+    def _resolve_machine(self, machine, mesh_shape, axes, multi_pod):
+        """(spec, mesh_shape, axes): the machine model of one call.
+
+        Precedence: explicit ``machine`` arg > session default >
+        (when no explicit mesh either) the TPU production preset the
+        historical ``multi_pod`` flag names. An explicit ``mesh_shape``
+        with no machine anywhere runs machine-less (``mesh_tree`` guess),
+        exactly the pre-MachineSpec behavior."""
+        spec = machine_lib.resolve(machine) or self.machine
+        if spec is None:
+            if mesh_shape is None:
+                spec = mesh_lib.production_machine(multi_pod)
+            else:
+                return None, tuple(mesh_shape), tuple(axes)
+        if mesh_shape is None:
+            mesh_shape, axes = spec.mesh_spec()
+        elif tuple(mesh_shape) != spec.mesh_shape:
+            raise ValueError(f"mesh_shape {tuple(mesh_shape)} does not "
+                             f"match machine {spec.name!r} "
+                             f"({spec.mesh_shape})")
+        return spec, tuple(mesh_shape), tuple(axes)
+
     # -- compiled-cell cache ----------------------------------------------
 
     def _key(self, arch: str, shape: str, mesh_shape: Tuple[int, ...],
              axes: Tuple[str, ...], profile: str, grad_compress,
-             overrides: Optional[Dict], device_order) -> str:
+             overrides: Optional[Dict], device_order,
+             machine: Optional[MachineSpec] = None) -> str:
         import jax
         order_tag = None
         if device_order is not None:
@@ -337,6 +382,10 @@ class PlacementSession:
                    # served to a TPU run of the same checkout
                    "backend": jax.default_backend(),
                    "n_dev": len(jax.devices()),
+                   # machine model: editing a registered spec must
+                   # invalidate records keyed under its name
+                   "machine": (machine.cache_token()
+                               if machine is not None else None),
                    "src": _source_fingerprint()}
         return hashlib.sha256(
             json.dumps(payload, sort_keys=True).encode()).hexdigest()[:24]
@@ -382,18 +431,20 @@ class PlacementSession:
                 multi_pod: bool = False, profile: str = "2d",
                 grad_compress=False,
                 overrides: Optional[Dict[str, Any]] = None,
-                device_order: Optional[np.ndarray] = None) -> CellRecord:
+                device_order: Optional[np.ndarray] = None,
+                machine: Optional[Any] = None) -> CellRecord:
         """The compiled-cell entry: cache hit or compile-and-extract.
 
         Returns the :class:`CellRecord` of the cell compiled on the mesh
         built with ``device_order`` (identity when None). ``mesh_shape``/
-        ``axes`` default to the production spec selected by ``multi_pod``.
+        ``axes`` default to the mesh of ``machine`` (a MachineSpec or
+        preset name; session default when unset), falling back to the TPU
+        production preset selected by ``multi_pod``.
         """
-        if mesh_shape is None:
-            mesh_shape, axes = mesh_lib.production_mesh_spec(multi_pod)
-        mesh_shape, axes = tuple(mesh_shape), tuple(axes)
+        spec, mesh_shape, axes = self._resolve_machine(
+            machine, mesh_shape, axes, multi_pod)
         key = self._key(arch_name, shape_name, mesh_shape, axes, profile,
-                        grad_compress, overrides, device_order)
+                        grad_compress, overrides, device_order, spec)
         rec = self._mem.get(key)
         if rec is None:
             rec = self._load(key)
@@ -504,7 +555,8 @@ class PlacementSession:
               multi_pod: bool = False, profile: str = "2d",
               grad_compress=False,
               overrides: Optional[Dict[str, Any]] = None,
-              recompile: bool = False) -> PlacementResult:
+              recompile: bool = False,
+              machine: Optional[Any] = None) -> PlacementResult:
         """Compile (cache-aware), search the device order, optionally
         recompile under it to a fixed point; return record + report.
 
@@ -514,24 +566,28 @@ class PlacementSession:
         if the final searched schedule still loses to identity's the
         report falls back to the identity order — "searched <= identity"
         holds on measured schedules, not just on the round-0 model.
+
+        ``machine`` (MachineSpec or preset name) supplies mesh + scored
+        topology declaratively — tree machines search against their F_l
+        tree, routing machines (torus presets) through the dense oracle.
         """
         if recompile and self.max_rounds < 1:
             raise ValueError("recompile=True needs max_rounds >= 1 — the "
                              "session never ships an order whose schedule "
                              "was not actually compiled")
-        if mesh_shape is None:
-            mesh_shape, axes = mesh_lib.production_mesh_spec(multi_pod)
-        mesh_shape, axes = tuple(mesh_shape), tuple(axes)
+        spec, mesh_shape, axes = self._resolve_machine(
+            machine, mesh_shape, axes, multi_pod)
         d = int(np.prod(mesh_shape))
-        topo = topology.mesh_tree(mesh_shape)
-        depths = np.asarray([topo.depth(int(c)) for c in topo.link_nodes])
+        topo = (spec.topology() if spec is not None
+                else topology.mesh_tree(mesh_shape))
+        depths = _link_depths(topo)
         ident = np.arange(d)
         compiles0, hits0 = self.n_compiles, self.n_cache_hits
 
         rec0 = self.measure(arch_name, shape_name, mesh_shape=mesh_shape,
                             axes=axes, profile=profile,
                             grad_compress=grad_compress,
-                            overrides=overrides)
+                            overrides=overrides, machine=spec)
         t0 = time.time()
         best = mapping.search(mesh_shape, topo, rec0.traffic,
                               n_random=self.map_restarts,
@@ -571,7 +627,8 @@ class PlacementSession:
                                      profile=profile,
                                      grad_compress=grad_compress,
                                      overrides=overrides,
-                                     device_order=best_order)
+                                     device_order=best_order,
+                                     machine=spec)
                 rec_s = rec_r
                 # score the incumbent on the schedule it actually produced,
                 # then search that schedule with the incumbent warm-started
@@ -653,16 +710,23 @@ class PlacementSession:
     # -- map_step: place an already-built step (train / serve) ------------
 
     def map_step(self, step, step_args, mesh, scan_lengths: Sequence[int],
-                 *, tag: str = "step") -> Tuple[Any, PlacementReport]:
+                 *, tag: str = "step",
+                 machine: Optional[Any] = None) -> Tuple[Any, PlacementReport]:
         """Compile a caller-built step on ``mesh`` (identity order), search
-        the logical->physical mapping over the machine tree of the mesh
-        shape (``guess_tree`` for 1-D local meshes), and return the mapped
-        mesh plus the report. The trainer's ``searched_mesh`` and serve's
-        ``--topology-aware`` are thin wrappers over this.
+        the logical->physical mapping over the machine topology —
+        ``machine`` (MachineSpec or preset name) when given, else the tree
+        guessed from the mesh shape (``guess_tree`` for 1-D local meshes)
+        — and return the mapped mesh plus the report. The trainer's
+        ``searched_mesh`` and serve's ``--topology-aware`` are thin
+        wrappers over this.
         """
         import jax
         mesh_shape = tuple(mesh.devices.shape)
         n_dev = int(np.prod(mesh_shape))
+        spec = machine_lib.resolve(machine) or self.machine
+        if spec is not None and spec.n_devices != n_dev:
+            raise ValueError(f"machine {spec.name!r} has "
+                             f"{spec.n_devices} devices, mesh has {n_dev}")
         t0 = time.time()
         with mesh:
             compiled = jax.jit(step).lower(*step_args).compile()
@@ -672,8 +736,9 @@ class PlacementSession:
         del compiled
         jax.clear_caches()
         self.n_compiles += 1
-        topo = topology.mesh_tree(mesh_shape)
-        depths = np.asarray([topo.depth(int(c)) for c in topo.link_nodes])
+        topo = (spec.topology() if spec is not None
+                else topology.mesh_tree(mesh_shape))
+        depths = _link_depths(topo)
         t0 = time.time()
         best = mapping.search(mesh_shape, topo, coll["traffic"],
                               n_random=self.map_restarts,

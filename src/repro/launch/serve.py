@@ -41,6 +41,10 @@ def main() -> None:
                     help="search the logical->physical device order from "
                          "one probe-compiled decode step before serving")
     ap.add_argument("--map-restarts", type=int, default=32)
+    ap.add_argument("--machine", default=None,
+                    help="machine-model preset (core.machine registry); "
+                         "serve on the preset's mesh instead of the "
+                         "device-count auto-match")
     args = ap.parse_args()
 
     arch = configs.get(args.arch)
@@ -50,8 +54,14 @@ def main() -> None:
     cfg = arch.smoke_config() if args.smoke else arch.make_config(
         "decode_32k")
     n_dev = len(jax.devices())
+    from repro.core import machine as machine_lib
+    machine = machine_lib.resolve(args.machine)
     session = PlacementSession(map_restarts=args.map_restarts)
-    mesh = session.serving_mesh()
+    if machine is not None:
+        shape_m, axes_m = machine.mesh_spec()
+        mesh = session.build_mesh(shape_m, axes_m)
+    else:
+        mesh = session.serving_mesh()
     rules = rules_for("lm", mesh.axis_names, profile=args.profile)
     from repro.models import transformer as tr
 
@@ -71,7 +81,7 @@ def main() -> None:
         probe = (params, cache, toks[:, :1], jnp.int32(0))
         mesh, rep = session.map_step(decode_fn, probe,
                                      mesh, [cfg.n_layers],
-                                     tag="decode-step")
+                                     tag="decode-step", machine=machine)
         print(rep.summary(), flush=True)
         with mesh:
             cache, _ = tr.init_cache(cfg, args.batch, max_seq, rules)

@@ -56,15 +56,16 @@ def make_batches(arch, cfg, batch: int, seq: int):
 
 
 def searched_mesh(step, step_args, mesh, scan_lengths, map_restarts=32,
-                  session=None):
+                  session=None, machine=None):
     """Thin wrapper over ``PlacementSession.map_step``: compile once on
-    ``mesh``, search the logical->physical mapping over the machine tree,
-    and return (mapped mesh, PlacementReport). The session owns the whole
+    ``mesh``, search the logical->physical mapping over the machine model
+    (``machine`` preset, else the tree guessed from the mesh shape), and
+    return (mapped mesh, PlacementReport). The session owns the whole
     compile -> traffic -> search -> mesh loop (DESIGN.md §6)."""
     from repro.launch.placement import PlacementSession
     session = session or PlacementSession(map_restarts=map_restarts)
     return session.map_step(step, step_args, mesh, scan_lengths,
-                            tag="train-step")
+                            tag="train-step", machine=machine)
 
 
 def main() -> None:
@@ -86,16 +87,27 @@ def main() -> None:
     ap.add_argument("--topology-aware", action="store_true")
     ap.add_argument("--map-restarts", type=int, default=32,
                     help="random restarts appended to the mapping search")
+    ap.add_argument("--machine", default=None,
+                    help="machine-model preset (core.machine registry); "
+                         "builds the preset's mesh — the local device "
+                         "count must cover it — and scores the mapping "
+                         "search against its topology")
     args = ap.parse_args()
     grad_compress = args.grad_compress_block or args.grad_compress
 
+    from repro.core import machine as machine_lib
     from repro.launch.placement import PlacementSession
+    machine = machine_lib.resolve(args.machine)
     session = PlacementSession(map_restarts=args.map_restarts)
     arch = configs.get(args.arch)
     cfg = arch.smoke_config() if args.smoke else arch.make_config(
         next(iter(arch.shapes)))
     n_dev = len(jax.devices())
-    mesh = session.local_mesh()
+    if machine is not None:
+        shape_m, axes_m = machine.mesh_spec()
+        mesh = session.build_mesh(shape_m, axes_m)
+    else:
+        mesh = session.local_mesh()
     rules = rules_for(arch.family, mesh.axis_names, profile=args.profile)
 
     if arch.family == "lm":
@@ -129,7 +141,7 @@ def main() -> None:
             probe_args = (params, opt, batch0)
         scan_lengths = [getattr(cfg, "n_layers", 1)]
         mesh, rep = searched_mesh(step, probe_args, mesh, scan_lengths,
-                                  session=session)
+                                  session=session, machine=machine)
         print(f"topology-aware mapping: identity makespan "
               f"{rep.identity['makespan']:.3e} -> searched "
               f"{rep.searched['makespan']:.3e} "

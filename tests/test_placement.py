@@ -46,7 +46,10 @@ class _StubSession(PlacementSession):
 
     def measure(self, arch_name, shape_name, *, mesh_shape=None, axes=None,
                 multi_pod=False, profile="2d", grad_compress=False,
-                overrides=None, device_order=None):
+                overrides=None, device_order=None, machine=None):
+        if mesh_shape is None:          # place() resolved a machine spec
+            mesh_shape, axes = self._resolve_machine(
+                machine, mesh_shape, axes, multi_pod)[1:]
         self.measured_orders.append(
             None if device_order is None else list(device_order))
         self.n_compiles += 1

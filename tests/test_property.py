@@ -160,6 +160,51 @@ def test_batched_permutation_scorer_agrees_with_fallbacks(ttc):
                                atol=1e-5 * scale)
 
 
+@given(graph_and_part())
+@settings(max_examples=25, deadline=None)
+def test_uniform_speeds_reproduce_todays_makespan_exactly(gtp):
+    """Heterogeneous-PE objective, degenerate case: all-ones speeds must
+    reproduce the speed-free makespan EXACTLY (x / 1.0 is an IEEE no-op),
+    in both the oracle and the jitted objective — so uniform machine
+    presets stay bit-for-bit on the historical numbers."""
+    g, topo, part = gtp
+    ones = np.ones(topo.k, dtype=np.float32)
+    m0, comp0, comm0 = reference.makespan_ref(part, g, topo)
+    m1, comp1, comm1 = reference.makespan_ref(part, g, topo, speed=ones)
+    assert m0 == m1
+    np.testing.assert_array_equal(comp0, comp1)
+    np.testing.assert_array_equal(comm0, comm1)
+    args = (jnp.asarray(part, jnp.int32), jnp.asarray(g.senders),
+            jnp.asarray(g.receivers), jnp.asarray(g.edge_weight),
+            jnp.asarray(g.node_weight), jnp.asarray(topo.subtree),
+            jnp.asarray(topo.F_l))
+    br0 = objective.makespan_tree(*args, k=topo.k)
+    br1 = objective.makespan_tree(*args, k=topo.k, speed=jnp.asarray(ones))
+    assert float(br0.makespan) == float(br1.makespan)
+    np.testing.assert_array_equal(np.asarray(br0.comp),
+                                  np.asarray(br1.comp))
+
+
+@given(graph_and_part())
+@settings(max_examples=25, deadline=None)
+def test_capacity_normalized_objective_equals_oracle(gtp):
+    """Random positive speeds: jitted capacity-normalized breakdown ==
+    loop-based oracle with the same speeds."""
+    g, topo, part = gtp
+    rng = np.random.default_rng(g.n_nodes)
+    speed = rng.uniform(0.25, 1.0, topo.k).astype(np.float32)
+    m_ref, comp_ref, comm_ref = reference.makespan_ref(part, g, topo,
+                                                       speed=speed)
+    br = objective.makespan_tree(
+        jnp.asarray(part, jnp.int32), jnp.asarray(g.senders),
+        jnp.asarray(g.receivers), jnp.asarray(g.edge_weight),
+        jnp.asarray(g.node_weight), jnp.asarray(topo.subtree),
+        jnp.asarray(topo.F_l), k=topo.k, speed=jnp.asarray(speed))
+    np.testing.assert_allclose(np.asarray(br.comp), comp_ref, rtol=1e-4,
+                               atol=1e-4)
+    assert abs(float(br.makespan) - m_ref) <= 1e-3 * max(1.0, m_ref)
+
+
 @given(st.integers(0, 100))
 @settings(max_examples=20, deadline=None)
 def test_monotone_edge_addition(seed):
