@@ -7,7 +7,6 @@ native metric so the trade is visible both ways.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, spmv_step_time, timed, tiny
 from repro.core import baselines

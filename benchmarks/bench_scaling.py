@@ -2,7 +2,6 @@
 bin count k (the production tree is 512 compute bins)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, timed, tiny
 from repro.core import baselines

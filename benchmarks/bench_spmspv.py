@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timed, tiny
+from benchmarks.common import emit, tiny
 from repro.core import baselines, reference
 from repro.core.partitioner import PartitionConfig, partition
 from repro.core.topology import balanced_tree

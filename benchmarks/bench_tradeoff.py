@@ -5,9 +5,7 @@ epsilon point. We report the Pareto frontier both methods achieve.
 """
 from __future__ import annotations
 
-import dataclasses
 
-import numpy as np
 
 from benchmarks.common import emit, tiny
 from repro.core import baselines

@@ -10,7 +10,7 @@ import os
 import numpy as np
 
 from benchmarks.common import emit, timed, tiny
-from repro.core import baselines, objective, reference
+from repro.core import baselines, reference
 from repro.core.partitioner import PartitionConfig, partition
 from repro.core.topology import (fat_tree_topology, make_tree,
                                  torus2d_topology, with_bin_speed)

@@ -10,7 +10,6 @@ import os
 import time
 from typing import Dict, List
 
-import numpy as np
 
 from repro.core import baselines
 from repro.core.topology import TreeTopology

@@ -9,6 +9,19 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== ruff lint =="
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src tests benchmarks scripts examples
+else
+  echo "ruff not installed; skipping (CI installs it)"
+fi
+
+echo "== static analysis gate (repro.analysis) =="
+# kernel race/tiling verifier + sharding lint; error findings fail the
+# gate, the JSON goes up as a CI artifact
+python -m repro.analysis --severity error --json analysis_findings.json
+
 python -m pytest -x -q "$@"
 
 if [[ "${BENCH_SMOKE:-0}" == "1" ]]; then

@@ -13,7 +13,6 @@ os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
 import argparse  # noqa: E402
 import re        # noqa: E402
 
-import jax       # noqa: E402
 
 from repro import configs                         # noqa: E402
 from repro.launch import hlo_cost as hc           # noqa: E402
@@ -95,14 +94,14 @@ def main():
             link, _ = _link_bytes(rm.group(2), nbytes, gs)
             coll_rows.append((m * link, m, rm.group(2), gs, s[:95]))
 
-    print(f"\n== top collectives (link bytes x mult) ==")
+    print("\n== top collectives (link bytes x mult) ==")
     coll_rows.sort(reverse=True)
     for r in coll_rows[: args.top]:
         print(f"{r[0]:.2e} x{r[1]:<5.0f} {r[2]:<18} gs={r[3]:<3} {r[4][:70]}")
     print(f"total coll: {sum(r[0] for r in coll_rows):.3e} "
           f"-> {sum(r[0] for r in coll_rows)/50e9:.2f}s")
 
-    print(f"\n== top HBM bytes (tight set) ==")
+    print("\n== top HBM bytes (tight set) ==")
     byte_rows.sort(reverse=True)
     for r in byte_rows[: args.top]:
         print(f"{r[0]:.2e} x{r[1]:<5.0f} {r[2]:<22} {r[3][:70]}")

@@ -1,0 +1,98 @@
+"""Static analysis: prove correctness properties *before* compile.
+
+The rest of the stack checks its properties dynamically — a kernel is
+trusted because a test executed it, a sharding because a cell compiled.
+This package is the static layer (DESIGN.md §Static-analysis):
+
+  * ``analysis.kernels`` — verifies every registered Pallas kernel plan
+    (``repro.kernels.KERNEL_REGISTRY``): grid/BlockSpec divisibility and
+    bounds, TPU tiling alignment, VMEM footprint, index-map purity, and
+    output write-race detection.
+  * ``analysis.shard_lint`` — lints sharding spec trees against mesh axes
+    (unknown axes, large fully-replicated params), scans a jitted step's
+    jaxpr for bf16 -> f32 upcasts, and sanity-checks measured device-pair
+    traffic matrices (symmetry, non-negativity, zero diagonal).
+
+Entry points: ``python -m repro.analysis`` (CLI, JSON findings, CI gate),
+``PlacementSession.verify()``, and ``--lint`` on the dryrun/train
+launchers. Every check emits :class:`Finding` records with a severity from
+:data:`SEVERITIES`; ``error`` findings gate CI (``scripts/ci.sh``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence
+
+SEVERITIES = ("info", "warning", "error")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One static-analysis result.
+
+    ``check`` is the stable machine-readable check id ("write-race",
+    "replicated-param", ...), ``subject`` the thing checked
+    ("kernels/flash_attention", "qwen2-1.5b/train_4k/2d:params/embed"),
+    ``message`` the human line, ``detail`` JSON-native context.
+    """
+    check: str
+    severity: str
+    subject: str
+    message: str
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}; "
+                             f"known: {SEVERITIES}")
+
+    def format(self) -> str:
+        return (f"[{self.severity.upper():<7}] {self.check:<20} "
+                f"{self.subject}: {self.message}")
+
+
+def severity_rank(severity: str) -> int:
+    return SEVERITIES.index(severity)
+
+
+def max_severity(findings: Sequence[Finding]) -> Optional[str]:
+    """Highest severity present, or None for an empty list."""
+    if not findings:
+        return None
+    return max((f.severity for f in findings), key=severity_rank)
+
+
+def at_least(findings: Sequence[Finding], severity: str) -> List[Finding]:
+    """Findings at or above ``severity``."""
+    rank = severity_rank(severity)
+    return [f for f in findings if severity_rank(f.severity) >= rank]
+
+
+def counts(findings: Sequence[Finding]) -> Dict[str, int]:
+    return {s: sum(1 for f in findings if f.severity == s)
+            for s in SEVERITIES}
+
+
+def to_json(findings: Sequence[Finding], *,
+            gate_severity: str = "error") -> str:
+    """Structured findings document (the CI artifact): every finding plus
+    per-severity counts and whether the gate at ``gate_severity`` fails."""
+    return json.dumps({
+        "findings": [dataclasses.asdict(f) for f in findings],
+        "counts": counts(findings),
+        "gate": {"severity": gate_severity,
+                 "failed": bool(at_least(findings, gate_severity))},
+    }, indent=1, default=str)
+
+
+def format_findings(findings: Sequence[Finding]) -> str:
+    """Human-readable report, most severe first."""
+    if not findings:
+        return "[ANALYSIS] clean: no findings"
+    ordered = sorted(findings, key=lambda f: -severity_rank(f.severity))
+    lines = [f.format() for f in ordered]
+    c = counts(findings)
+    lines.append(f"[ANALYSIS] {c['error']} error(s), "
+                 f"{c['warning']} warning(s), {c['info']} info")
+    return "\n".join(lines)

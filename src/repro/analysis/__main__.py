@@ -1,0 +1,97 @@
+"""``python -m repro.analysis`` — the static-analysis CLI and CI gate.
+
+Runs the kernel verifier over every registered Pallas kernel plan and the
+sharding lint over the lm/gnn/recsys profile representatives, prints the
+findings, optionally writes them as structured JSON (the CI artifact), and
+exits nonzero when any finding reaches ``--severity`` (default ``error``).
+
+    PYTHONPATH=src python -m repro.analysis                  # full suite
+    PYTHONPATH=src python -m repro.analysis --suite kernels
+    PYTHONPATH=src python -m repro.analysis --severity error \
+        --json analysis_findings.json                        # the CI gate
+    PYTHONPATH=src python -m repro.analysis --arch qwen2-72b --no-trace
+
+Fully static: no XLA compile, no kernel execution, no accelerator — safe
+to run anywhere the package imports.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from repro import analysis
+from repro.analysis import Finding
+
+# family representatives the sharding suite lints by default; each is
+# checked over every profile its arch declares (ArchDef.profiles)
+DEFAULT_ARCHS = ("qwen2-1.5b", "gin-tu", "two-tower-retrieval")
+
+
+def run_kernel_suite() -> List[Finding]:
+    from repro.analysis import kernels as akernels
+    return akernels.verify_all()
+
+
+def run_sharding_suite(archs, *, trace: bool = True) -> List[Finding]:
+    from repro import configs
+    from repro.analysis import shard_lint
+    findings: List[Finding] = []
+    for arch_name in archs:
+        arch = configs.get(arch_name)
+        for profile in arch.profiles:
+            findings.extend(shard_lint.lint_cell(arch_name,
+                                                 profile=profile,
+                                                 trace=trace))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static kernel/sharding verifier (no execution)")
+    ap.add_argument("--suite", choices=("all", "kernels", "sharding"),
+                    default="all")
+    ap.add_argument("--severity", choices=analysis.SEVERITIES,
+                    default="error",
+                    help="exit nonzero when any finding is at or above "
+                         "this severity (default: error)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured JSON findings (the CI artifact)")
+    ap.add_argument("--arch", action="append", default=[],
+                    help="arch(s) for the sharding suite (repeatable; "
+                         f"default: {', '.join(DEFAULT_ARCHS)})")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the jaxpr walk (spec-tree lint only)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="print only findings at/above --severity")
+    args = ap.parse_args(argv)
+
+    findings: List[Finding] = []
+    if args.suite in ("all", "kernels"):
+        findings.extend(run_kernel_suite())
+    if args.suite in ("all", "sharding"):
+        findings.extend(run_sharding_suite(args.arch or DEFAULT_ARCHS,
+                                           trace=not args.no_trace))
+
+    shown = (analysis.at_least(findings, args.severity) if args.quiet
+             else findings)
+    print(analysis.format_findings(shown), flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(analysis.to_json(findings,
+                                     gate_severity=args.severity))
+        print(f"[ANALYSIS] wrote {len(findings)} finding(s) to "
+              f"{args.json}", flush=True)
+    gating = analysis.at_least(findings, args.severity)
+    if gating:
+        print(f"[ANALYSIS] GATE FAILED: {len(gating)} finding(s) at or "
+              f"above {args.severity!r}", flush=True)
+        return 1
+    print(f"[ANALYSIS] gate clean at severity {args.severity!r}",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,7 @@ those into NamedShardings for ``jax.jit(...).lower().compile()``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

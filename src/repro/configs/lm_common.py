@@ -4,7 +4,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import common as cc

@@ -61,13 +61,10 @@ def block_placement(part: np.ndarray, k: int) -> BlockPlacement:
     n_pad = block * k
     order = np.argsort(part, kind="stable")      # vertices grouped by bin
     inverse = np.full(n_pad, n, dtype=np.int64)  # n = sentinel (padding)
-    write = 0
     starts = np.concatenate([[0], np.cumsum(counts)])
     for b in range(k):
         seg = order[starts[b]:starts[b + 1]]
         inverse[b * block: b * block + seg.shape[0]] = seg
-        write += seg.shape[0]
-    perm = np.full(n_pad, -1, dtype=np.int64)
     real = inverse < n
     perm_positions = np.nonzero(real)[0]
     perm_vertices = inverse[real]

@@ -14,7 +14,7 @@ path-incidence tensor ``R[i, j, l]`` (small bin counts only).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 

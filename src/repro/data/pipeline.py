@@ -9,7 +9,7 @@ a power law so the logQ correction has something to correct.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 
@@ -111,7 +111,6 @@ def sample_fanout(g: Graph, seeds: np.ndarray, fanout: Tuple[int, ...],
     order = np.concatenate([np.nonzero(seed_set)[0], np.nonzero(~seed_set)[0]])
     rank = np.empty_like(order)
     rank[order] = np.arange(order.shape[0])
-    local = {int(nid): rank[i] for i, nid in enumerate(nodes)}
     u = rank[np.searchsorted(nodes, np.concatenate(edges_u))]
     v = rank[np.searchsorted(nodes, np.concatenate(edges_v))]
     # symmetric arcs for message passing
@@ -199,7 +198,6 @@ def recsys_batches(n_items: int, n_cats: int, batch: int, hist_len: int,
         item = rng.choice(n_items, size=batch, p=probs).astype(np.int32)
         # history correlated with the positive item's category
         hist = rng.choice(n_items, size=(batch, hist_len), p=probs)
-        same_cat = np.nonzero(cat_of[hist] == cat_of[item][:, None])
         drop = rng.random((batch, hist_len)) < 0.2
         hist = np.where(drop, -1, hist).astype(np.int32)
         dense = rng.normal(0, 1, (batch, d_dense)).astype(np.float32)

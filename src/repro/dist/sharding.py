@@ -29,6 +29,7 @@ so a ("pod", "data") product that fails may still keep "pod").
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -174,13 +175,18 @@ def recsys_rules(mesh_axes: Sequence[str]) -> Rules:
 # Spec sanitation + concrete shardings
 # ---------------------------------------------------------------------------
 
-def sanitize_spec(shape: Sequence[int], spec: P, mesh) -> P:
+def sanitize_spec(shape: Sequence[int], spec: P, mesh, *,
+                  strict: bool = False) -> P:
     """Drop mesh axes that do not evenly divide their dimension.
 
-    Per-dim: axes the mesh lacks are removed outright, then the entry keeps
-    the longest *prefix* of its mesh axes whose size product divides the
-    dim (dims sharded over ("pod", "data") degrade to ("pod",) before
-    giving up entirely). Entries beyond ``len(shape)`` are dropped; missing
+    Per-dim: axes the mesh lacks are removed outright (with a warning —
+    a spec naming a nonexistent axis is almost always a sharding-table
+    typo; ``strict=True`` raises ``ValueError`` instead, and is the
+    runtime twin of the ``unknown-mesh-axis`` check in
+    ``repro.analysis.shard_lint``), then the entry keeps the longest
+    *prefix* of its mesh axes whose size product divides the dim (dims
+    sharded over ("pod", "data") degrade to ("pod",) before giving up
+    entirely). Entries beyond ``len(shape)`` are dropped; missing
     trailing entries stay unsharded.
     """
     sizes = dict(mesh.shape)
@@ -191,6 +197,13 @@ def sanitize_spec(shape: Sequence[int], spec: P, mesh) -> P:
             out.append(None)
             continue
         axes = entry if isinstance(entry, tuple) else (entry,)
+        missing = tuple(a for a in axes if a not in sizes)
+        if missing:
+            msg = (f"spec entry {entry!r} names mesh axes {missing!r} "
+                   f"absent from the mesh (axes: {sorted(sizes)})")
+            if strict:
+                raise ValueError(msg)
+            warnings.warn(msg, stacklevel=2)
         axes = tuple(a for a in axes if a in sizes)
         while axes:
             prod = 1
@@ -204,7 +217,8 @@ def sanitize_spec(shape: Sequence[int], spec: P, mesh) -> P:
     return P(*out)
 
 
-def sanitize_tree(tree: Any, specs: Any, mesh) -> Any:
+def sanitize_tree(tree: Any, specs: Any, mesh, *,
+                  strict: bool = False) -> Any:
     """``sanitize_spec`` over a pytree of arrays/ShapeDtypeStructs and its
     mirror tree of PartitionSpecs (the dry-run runs every argument's spec
     tree through this before building shardings). ``None`` spec leaves
@@ -212,7 +226,8 @@ def sanitize_tree(tree: Any, specs: Any, mesh) -> Any:
     leaves, treedef = jax.tree.flatten(tree)
     spec_leaves = treedef.flatten_up_to(specs)
     return treedef.unflatten([
-        None if s is None else sanitize_spec(x.shape, s, mesh)
+        None if s is None else sanitize_spec(x.shape, s, mesh,
+                                             strict=strict)
         for x, s in zip(leaves, spec_leaves)])
 
 

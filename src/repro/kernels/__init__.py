@@ -13,8 +13,31 @@ Kernels:
   * ``bsr_spmm`` — block-sparse message passing (scalar-prefetched BSR);
     the op whose locality the partitioner's reordering improves.
   * ``bag_combine`` — embedding-bag weighted reduction (recsys lookup).
+  * ``flash_attention`` — fused online-softmax attention forward — VMEM
+    score tiles, GQA via BlockSpec index maps; the LM hot spot whose HBM
+    traffic the roofline memory term models.
+
+Every kernel builds its ``pallas_call`` arguments through a ``plan(...)``
+function (``plan.py:KernelPlan``) and registers an ``example_plan`` in
+``KERNEL_REGISTRY`` below — the static verifier (``repro.analysis.kernels``)
+proves grid/BlockSpec/VMEM/write-race properties on the registered plans
+without executing anything, and a completeness test pins that every module
+with a ``pallas_call`` site is registered (new kernels can't skip
+verification; DESIGN.md §Static-analysis).
 """
+from typing import Callable, Dict
+
 from repro.kernels import ops, ref  # noqa: F401
-# flash_attention (kernels/flash_attention.py): fused online-softmax
-# attention forward — VMEM score tiles, GQA via BlockSpec index maps; the
-# LM hot spot whose HBM traffic the roofline memory term models.
+from repro.kernels import (bag_combine, bsr_spmm, flash_attention,
+                           partition_gain, quotient_link_loads)
+from repro.kernels.plan import KernelPlan  # noqa: F401
+
+# kernel name (= module stem) -> zero-arg plan builder at small
+# representative shapes; repro.analysis.kernels.verify_all walks this.
+KERNEL_REGISTRY: Dict[str, Callable[[], KernelPlan]] = {
+    "flash_attention": flash_attention.example_plan,
+    "bsr_spmm": bsr_spmm.example_plan,
+    "bag_combine": bag_combine.example_plan,
+    "partition_gain": partition_gain.example_plan,
+    "quotient_link_loads": quotient_link_loads.example_plan,
+}

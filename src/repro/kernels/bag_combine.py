@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.plan import KernelPlan
+
 
 def _kernel(g_ref, w_ref, out_ref):
     g = g_ref[...]                     # [Bt, D, Ft]
@@ -26,6 +28,32 @@ def _kernel(g_ref, w_ref, out_ref):
         preferred_element_type=out_ref.dtype)[:, 0, :]
 
 
+def plan(b: int, d: int, f: int, *, bag_blk: int = 256,
+         feat_blk: int = 128, dtype=jnp.float32) -> KernelPlan:
+    """Static call plan: pure (bag tile x feature tile) map, no output
+    revisits — every grid point owns its output block."""
+    b_pad = ((b + bag_blk - 1) // bag_blk) * bag_blk
+    f_pad = ((f + feat_blk - 1) // feat_blk) * feat_blk
+    return KernelPlan(
+        name="bag_combine",
+        grid=(b_pad // bag_blk, f_pad // feat_blk),
+        in_specs=(
+            pl.BlockSpec((bag_blk, d, feat_blk), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bag_blk, d), lambda i, j: (i, 0)),
+        ),
+        out_specs=(pl.BlockSpec((bag_blk, feat_blk),
+                                lambda i, j: (i, j)),),
+        operands=(jax.ShapeDtypeStruct((b_pad, d, f_pad), dtype),
+                  jax.ShapeDtypeStruct((b_pad, d), dtype)),
+        outputs=(jax.ShapeDtypeStruct((b_pad, f_pad), dtype),),
+        meta=dict(b_pad=b_pad, f_pad=f_pad),
+    )
+
+
+def example_plan() -> KernelPlan:
+    return plan(b=512, d=16, f=256)
+
+
 @functools.partial(jax.jit, static_argnames=("bag_blk", "feat_blk",
                                               "interpret"))
 def bag_combine(gathered: jnp.ndarray, weights: jnp.ndarray, *,
@@ -33,19 +61,17 @@ def bag_combine(gathered: jnp.ndarray, weights: jnp.ndarray, *,
                 interpret: bool = False) -> jnp.ndarray:
     """[B, D, F] x [B, D] -> [B, F] weighted bag reduction."""
     b, d, f = gathered.shape
-    b_pad = ((b + bag_blk - 1) // bag_blk) * bag_blk
-    f_pad = ((f + feat_blk - 1) // feat_blk) * feat_blk
+    p = plan(b, d, f, bag_blk=bag_blk, feat_blk=feat_blk,
+             dtype=gathered.dtype)
+    b_pad, f_pad = p.meta["b_pad"], p.meta["f_pad"]
     g = jnp.pad(gathered, ((0, b_pad - b), (0, 0), (0, f_pad - f)))
     w = jnp.pad(weights, ((0, b_pad - b), (0, 0)))
     out = pl.pallas_call(
         _kernel,
-        grid=(b_pad // bag_blk, f_pad // feat_blk),
-        in_specs=[
-            pl.BlockSpec((bag_blk, d, feat_blk), lambda i, j: (i, 0, j)),
-            pl.BlockSpec((bag_blk, d), lambda i, j: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((bag_blk, feat_blk), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b_pad, f_pad), gathered.dtype),
+        grid=p.grid,
+        in_specs=list(p.in_specs),
+        out_specs=p.out_specs[0],
+        out_shape=p.outputs[0],
         interpret=interpret,
     )(g, w)
     return out[:b, :f]

@@ -26,6 +26,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.plan import KernelPlan
+
 
 def _kernel(rows_ref, cols_ref, a_ref, x_ref, out_ref):
     t = pl.program_id(1)
@@ -43,6 +45,50 @@ def _kernel(rows_ref, cols_ref, a_ref, x_ref, out_ref):
         preferred_element_type=out_ref.dtype)
 
 
+def plan(nnzb: int, r: int, f: int, n_block_rows: int, n_block_cols: int,
+         *, feat_blk: int = 128, dtype=jnp.float32,
+         block_rows=None, block_cols=None) -> KernelPlan:
+    """Static call plan. The nnzb axis (grid axis 1, innermost) revisits
+    the output tile of a block row across that row's consecutive nonzero
+    blocks — the accumulation target is the resident output block itself
+    (``out_accumulate``), there is no separate scratch. ``block_rows``/
+    ``block_cols`` are the scalar-prefetch operands the index maps consume;
+    the kernel leaves them traced (``index_args=()``), example plans pass
+    host arrays so the verifier can evaluate the maps."""
+    index_args = (() if block_rows is None
+                  else (np.asarray(block_rows, dtype=np.int32),
+                        np.asarray(block_cols, dtype=np.int32)))
+    return KernelPlan(
+        name="bsr_spmm",
+        grid=(f // feat_blk, nnzb),
+        in_specs=(
+            pl.BlockSpec((1, r, r), lambda fi, t, rows, cols: (t, 0, 0)),
+            pl.BlockSpec((r, feat_blk),
+                         lambda fi, t, rows, cols: (cols[t], fi)),
+        ),
+        out_specs=(pl.BlockSpec((r, feat_blk),
+                                lambda fi, t, rows, cols: (rows[t], fi)),),
+        operands=(jax.ShapeDtypeStruct((nnzb, r, r), dtype),
+                  jax.ShapeDtypeStruct((n_block_cols * r, f), dtype)),
+        outputs=(jax.ShapeDtypeStruct((n_block_rows * r, f), dtype),),
+        seq_axes=(1,),
+        out_accumulate=True,
+        index_args=index_args,
+    )
+
+
+def example_plan() -> KernelPlan:
+    """Chain graph at 512 nodes (4 block rows, diagonal + off-diagonal
+    blocks) for the static verifier's registry."""
+    n = 512
+    senders = np.arange(n - 1)
+    receivers = np.arange(1, n)
+    rows, cols, blocks, nb = to_bsr(n, senders, receivers,
+                                    np.ones(n - 1, np.float32))
+    return plan(blocks.shape[0], blocks.shape[1], 256, nb, nb,
+                block_rows=rows, block_cols=cols)
+
+
 @functools.partial(jax.jit, static_argnames=("n_block_rows", "feat_blk",
                                               "interpret"))
 def bsr_spmm(block_rows: jnp.ndarray, block_cols: jnp.ndarray,
@@ -57,21 +103,17 @@ def bsr_spmm(block_rows: jnp.ndarray, block_cols: jnp.ndarray,
     nnzb, r, _ = blocks.shape
     f = x.shape[1]
     assert f % feat_blk == 0, (f, feat_blk)
-    grid = (f // feat_blk, nnzb)
+    p = plan(nnzb, r, f, n_block_rows, x.shape[0] // r, feat_blk=feat_blk,
+             dtype=x.dtype)
     return pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, r, r), lambda fi, t, rows, cols: (t, 0, 0)),
-                pl.BlockSpec((r, feat_blk),
-                             lambda fi, t, rows, cols: (cols[t], fi)),
-            ],
-            out_specs=pl.BlockSpec((r, feat_blk),
-                                   lambda fi, t, rows, cols: (rows[t], fi)),
+            grid=p.grid,
+            in_specs=list(p.in_specs),
+            out_specs=p.out_specs[0],
         ),
-        out_shape=jax.ShapeDtypeStruct((n_block_rows * r, f), x.dtype),
+        out_shape=p.outputs[0],
         interpret=interpret,
     )(block_rows.astype(jnp.int32), block_cols.astype(jnp.int32), blocks, x)
 

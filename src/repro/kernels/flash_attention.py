@@ -24,6 +24,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.plan import KernelPlan
+
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *, scale: float,
             causal: bool, bq: int, bk: int, sk: int):
@@ -66,6 +68,48 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, *, scale: float,
             o_ref.dtype)
 
 
+def plan(b: int, sq: int, sk: int, h: int, kh: int, d: int, *,
+         block_q: int = 128, block_k: int = 128,
+         dtype=jnp.float32) -> KernelPlan:
+    """Static call plan: operands are the flattened+padded [BH, S, D]
+    layouts the wrapper feeds the ``pallas_call``. The kv-block axis (grid
+    axis 2, innermost) legitimately revisits each output block — the online
+    softmax state (acc, m, l) rides in VMEM scratch across it."""
+    g = h // kh
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    nq = (sq + bq - 1) // bq
+    nk = (sk + bk - 1) // bk
+    sq_p, sk_p = nq * bq, nk * bk
+    return KernelPlan(
+        name="flash_attention",
+        grid=(b * h, nq, nk),
+        in_specs=(
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda bh, i, j, g=g: (bh // g, j, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda bh, i, j, g=g: (bh // g, j, 0)),
+        ),
+        out_specs=(pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),),
+        operands=(jax.ShapeDtypeStruct((b * h, sq_p, d), dtype),
+                  jax.ShapeDtypeStruct((b * kh, sk_p, d), dtype),
+                  jax.ShapeDtypeStruct((b * kh, sk_p, d), dtype)),
+        outputs=(jax.ShapeDtypeStruct((b * h, sq_p, d), dtype),),
+        scratch_shapes=(pltpu.VMEM((bq, d), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32)),
+        seq_axes=(2,),
+        meta=dict(bq=bq, bk=bk, sq_p=sq_p, sk_p=sk_p),
+    )
+
+
+def example_plan() -> KernelPlan:
+    """Small GQA instance (2 query heads per KV head) for the static
+    verifier's registry (``repro.analysis.kernels``)."""
+    return plan(b=1, sq=256, sk=256, h=2, kh=1, d=128)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "block_q",
                                              "block_k", "interpret"))
 def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
@@ -75,13 +119,11 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     """q [B, Sq, H, D]; k/v [B, Sk, KH, D] -> [B, Sq, H, D]."""
     b, sq, h, d = q.shape
     _, sk, kh, _ = k.shape
-    g = h // kh
     scale = 1.0 / np.sqrt(d)
-    bq = min(block_q, sq)
-    bk = min(block_k, sk)
-    nq = (sq + bq - 1) // bq
-    nk = (sk + bk - 1) // bk
-    sq_p, sk_p = nq * bq, nk * bk
+    p = plan(b, sq, sk, h, kh, d, block_q=block_q, block_k=block_k,
+             dtype=q.dtype)
+    bq, bk = p.meta["bq"], p.meta["bk"]
+    sq_p, sk_p = p.meta["sq_p"], p.meta["sk_p"]
 
     qf = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, d)
     kf = jnp.moveaxis(k, 2, 1).reshape(b * kh, sk, d)
@@ -93,22 +135,13 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, causal=causal, bq=bq,
                           bk=bk, sk=sk),
-        grid=(b * h, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
-            pl.BlockSpec((1, bk, d),
-                         lambda bh, i, j, g=g: (bh // g, j, 0)),
-            pl.BlockSpec((1, bk, d),
-                         lambda bh, i, j, g=g: (bh // g, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, d), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-        ],
+        grid=p.grid,
+        in_specs=list(p.in_specs),
+        out_specs=p.out_specs[0],
+        out_shape=p.outputs[0],
+        scratch_shapes=list(p.scratch_shapes),
         interpret=interpret,
     )(qf, kf, vf)
-    # BlockSpec index maps must not close over traced values; g is static.
+    # BlockSpec index maps must not close over traced values; g is static
+    # (repro.analysis.kernels rejects traced closures at verify time).
     return jnp.moveaxis(out[:, :sq].reshape(b, h, sq, d), 1, 2)

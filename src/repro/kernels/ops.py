@@ -14,7 +14,6 @@ values that change per step (partition labels, features) flow through jit.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

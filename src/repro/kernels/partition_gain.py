@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.plan import KernelPlan
+
 
 def _kernel(nbr_bin_ref, nbr_w_ref, out_ref, *, k: int, d: int):
     bins = nbr_bin_ref[...]                # [R, D] int32, k = padding
@@ -39,6 +41,28 @@ def _kernel(nbr_bin_ref, nbr_w_ref, out_ref, *, k: int, d: int):
         0, d, body, jnp.zeros((r, k), jnp.float32))
 
 
+def plan(n: int, d: int, k: int, *, row_blk: int = 256) -> KernelPlan:
+    """Static call plan: one row tile per grid point, no output revisits."""
+    n_pad = ((n + row_blk - 1) // row_blk) * row_blk
+    return KernelPlan(
+        name="partition_gain",
+        grid=(n_pad // row_blk,),
+        in_specs=(
+            pl.BlockSpec((row_blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((row_blk, d), lambda i: (i, 0)),
+        ),
+        out_specs=(pl.BlockSpec((row_blk, k), lambda i: (i, 0)),),
+        operands=(jax.ShapeDtypeStruct((n_pad, d), jnp.int32),
+                  jax.ShapeDtypeStruct((n_pad, d), jnp.float32)),
+        outputs=(jax.ShapeDtypeStruct((n_pad, k), jnp.float32),),
+        meta=dict(n_pad=n_pad),
+    )
+
+
+def example_plan() -> KernelPlan:
+    return plan(n=1000, d=8, k=8)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "row_blk", "interpret"))
 def partition_gain_ell(nbr_bin: jnp.ndarray, nbr_w: jnp.ndarray, *, k: int,
                        row_blk: int = 256,
@@ -49,19 +73,17 @@ def partition_gain_ell(nbr_bin: jnp.ndarray, nbr_w: jnp.ndarray, *, k: int,
     ``nbr_w``: [n, D] edge weight (0 for padding). Rows padded to row_blk.
     """
     n, d = nbr_bin.shape
-    n_pad = ((n + row_blk - 1) // row_blk) * row_blk
+    p = plan(n, d, k, row_blk=row_blk)
+    n_pad = p.meta["n_pad"]
     nb = jnp.pad(nbr_bin.astype(jnp.int32), ((0, n_pad - n), (0, 0)),
                  constant_values=k)
     nw = jnp.pad(nbr_w.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
     out = pl.pallas_call(
         functools.partial(_kernel, k=k, d=d),
-        grid=(n_pad // row_blk,),
-        in_specs=[
-            pl.BlockSpec((row_blk, d), lambda i: (i, 0)),
-            pl.BlockSpec((row_blk, d), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((row_blk, k), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
+        grid=p.grid,
+        in_specs=list(p.in_specs),
+        out_specs=p.out_specs[0],
+        out_shape=p.outputs[0],
         interpret=interpret,
     )(nb, nw)
     return out[:n]

@@ -1,0 +1,54 @@
+"""Static call plans: the one description of a ``pl.pallas_call`` that both
+the kernel itself and the static verifier consume.
+
+Every kernel module in this package builds its ``pallas_call`` arguments —
+grid, BlockSpecs, padded operand/output avals, VMEM scratch — through a
+``plan(...)`` function returning a :class:`KernelPlan`, and exposes an
+``example_plan()`` returning the same plan at small representative shapes.
+``repro.analysis.kernels`` verifies plans *without executing anything*:
+because the kernel's ``pallas_call`` is constructed from the identical plan
+object, the verified tiling cannot drift from the executed one.
+
+Fields beyond what ``pallas_call`` needs are verifier declarations:
+
+* ``seq_axes`` — grid axes on which distinct grid points may legitimately
+  revisit the same output block. The TPU grid is sequential with the last
+  axis minor, so such axes must be the *trailing* axes of the grid and the
+  revisits must carry state (``scratch_shapes`` non-empty, or
+  ``out_accumulate=True`` for kernels that accumulate into the resident
+  output block itself). Any other output collision is a write race.
+* ``index_args`` — trailing arguments appended to every BlockSpec index map
+  call (the scalar-prefetch operands of ``PrefetchScalarGridSpec`` kernels).
+  Kernels leave this empty at call time (the values are traced); example
+  plans fill in concrete host arrays so the verifier can enumerate the grid.
+* ``vmem_budget`` — per-step VMEM byte budget the in/out blocks plus
+  scratch must fit in (defaults to 16 MiB, one TPU core's VMEM).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+
+VMEM_BYTES = 16 * 2**20            # one TPU core's VMEM
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Everything static about one ``pl.pallas_call`` site (see module
+    docstring). ``operands[i]`` is the *padded* aval the i-th ``in_specs``
+    entry tiles; ``outputs`` mirrors ``out_specs``. ``meta`` carries
+    kernel-private statics (block sizes, pad amounts) the wrapper needs."""
+    name: str
+    grid: Tuple[int, ...]
+    in_specs: Tuple[Any, ...]                  # pl.BlockSpec per operand
+    out_specs: Tuple[Any, ...]
+    operands: Tuple[jax.ShapeDtypeStruct, ...]
+    outputs: Tuple[jax.ShapeDtypeStruct, ...]
+    scratch_shapes: Tuple[Any, ...] = ()
+    seq_axes: Tuple[int, ...] = ()
+    out_accumulate: bool = False
+    index_args: Tuple[Any, ...] = ()
+    vmem_budget: int = VMEM_BYTES
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.plan import KernelPlan
+
 
 def _kernel(bi_ref, bj_ref, w_ref, s_ref, fl_ref, out_ref, w_acc, *, k: int,
             n_blocks: int):
@@ -58,6 +60,41 @@ def _kernel(bi_ref, bj_ref, w_ref, s_ref, fl_ref, out_ref, w_acc, *, k: int,
         out_ref[...] = fl_ref[...] * comm
 
 
+def plan(m: int, k: int, L: int, *, m_blk: int = 512) -> KernelPlan:
+    """Static call plan: the single (arc-block) grid axis is sequential —
+    every grid point writes the same [L] output block, carrying the k x k
+    quotient accumulator in VMEM scratch; only the final step (epilogue)
+    produces the real output."""
+    m_pad = ((m + m_blk - 1) // m_blk) * m_blk
+    n_blocks = m_pad // m_blk
+    return KernelPlan(
+        name="quotient_link_loads",
+        grid=(n_blocks,),
+        in_specs=(
+            pl.BlockSpec((m_blk,), lambda i: (i,)),
+            pl.BlockSpec((m_blk,), lambda i: (i,)),
+            pl.BlockSpec((m_blk,), lambda i: (i,)),
+            pl.BlockSpec((L, k), lambda i: (0, 0)),
+            pl.BlockSpec((L,), lambda i: (0,)),
+        ),
+        out_specs=(pl.BlockSpec((L,), lambda i: (0,)),),
+        operands=(jax.ShapeDtypeStruct((m_pad,), jnp.int32),
+                  jax.ShapeDtypeStruct((m_pad,), jnp.int32),
+                  jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+                  jax.ShapeDtypeStruct((L, k), jnp.float32),
+                  jax.ShapeDtypeStruct((L,), jnp.float32)),
+        outputs=(jax.ShapeDtypeStruct((L,), jnp.float32),),
+        scratch_shapes=(pltpu.VMEM((k, k), jnp.float32),),
+        seq_axes=(0,),
+        meta=dict(m_pad=m_pad, n_blocks=n_blocks),
+    )
+
+
+def example_plan() -> KernelPlan:
+    """k = 16 bins over a depth-2 machine tree (L = 20 links)."""
+    return plan(m=2048, k=16, L=20)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "m_blk", "interpret"))
 def quotient_link_loads(bin_i: jnp.ndarray, bin_j: jnp.ndarray,
                         weight: jnp.ndarray, subtree: jnp.ndarray,
@@ -70,25 +107,18 @@ def quotient_link_loads(bin_i: jnp.ndarray, bin_j: jnp.ndarray,
     Arcs are padded to a multiple of ``m_blk`` with ``weight = 0``.
     """
     m = bin_i.shape[0]
-    m_pad = ((m + m_blk - 1) // m_blk) * m_blk
-    pad = m_pad - m
+    L = subtree.shape[0]
+    p = plan(m, k, L, m_blk=m_blk)
+    pad = p.meta["m_pad"] - m
     bi = jnp.pad(bin_i.astype(jnp.int32), (0, pad), constant_values=k)
     bj = jnp.pad(bin_j.astype(jnp.int32), (0, pad), constant_values=k)
     w = jnp.pad(weight.astype(jnp.float32), (0, pad))
-    L = subtree.shape[0]
-    n_blocks = m_pad // m_blk
     return pl.pallas_call(
-        functools.partial(_kernel, k=k, n_blocks=n_blocks),
-        grid=(n_blocks,),
-        in_specs=[
-            pl.BlockSpec((m_blk,), lambda i: (i,)),
-            pl.BlockSpec((m_blk,), lambda i: (i,)),
-            pl.BlockSpec((m_blk,), lambda i: (i,)),
-            pl.BlockSpec((L, k), lambda i: (0, 0)),
-            pl.BlockSpec((L,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((L,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((k, k), jnp.float32)],
+        functools.partial(_kernel, k=k, n_blocks=p.meta["n_blocks"]),
+        grid=p.grid,
+        in_specs=list(p.in_specs),
+        out_specs=p.out_specs[0],
+        out_shape=p.outputs[0],
+        scratch_shapes=list(p.scratch_shapes),
         interpret=interpret,
     )(bi, bj, w, subtree.astype(jnp.float32), F_l.astype(jnp.float32))

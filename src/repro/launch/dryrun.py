@@ -51,7 +51,7 @@ import argparse            # noqa: E402
 import dataclasses         # noqa: E402
 import json                # noqa: E402
 import traceback           # noqa: E402
-from typing import Any, Dict, List, Optional, Tuple  # noqa: E402
+from typing import Dict, List, Optional, Tuple  # noqa: E402
 
 import jax                 # noqa: E402
 import numpy as np         # noqa: E402
@@ -344,6 +344,10 @@ def main() -> None:
                     help="compiled-cell cache directory (default "
                          "$REPRO_PLACEMENT_CACHE or "
                          "results/placement_cache; '' disables)")
+    ap.add_argument("--lint", action="store_true",
+                    help="after the run, static-verify the Pallas kernel "
+                         "registry and every measured traffic matrix "
+                         "(repro.analysis); error findings fail the run")
     ap.add_argument("--mapping-grid", action="store_true",
                     help="multi-pod searched-vs-identity comparison for "
                          "every sharding profile of the given --arch "
@@ -370,6 +374,8 @@ def main() -> None:
                                 overrides, map_restarts=args.map_restarts,
                                 recompile=args.recompile, session=session,
                                 machine=machine)
+        if args.lint:
+            _lint_gate(session)
         if failures:
             raise SystemExit(f"{failures} mapping-grid cells failed")
         return
@@ -435,8 +441,21 @@ def main() -> None:
     print(f"[CACHE] compiles={session.n_compiles} "
           f"hits={session.n_cache_hits} dir={session.cache_dir}",
           flush=True)
+    if args.lint:
+        _lint_gate(session)
     if failures:
         raise SystemExit(f"{failures} dry-run cells failed")
+
+
+def _lint_gate(session: placement.PlacementSession) -> None:
+    """``--lint``: session-wide static analysis; errors fail the run."""
+    from repro import analysis
+    findings = session.verify()
+    print(analysis.format_findings(findings), flush=True)
+    errors = analysis.at_least(findings, "error")
+    if errors:
+        raise SystemExit(f"--lint: {len(errors)} error-severity "
+                         "finding(s)")
 
 
 if __name__ == "__main__":

@@ -707,6 +707,29 @@ class PlacementSession:
         return PlacementResult(record=rec0, report=report,
                                searched_record=rec_s if recompile else None)
 
+    # -- verify: the static-analysis hook ---------------------------------
+
+    def verify(self, *, kernels: bool = True, traffic: bool = True):
+        """Static analysis over everything this session touches
+        (``repro.analysis``; DESIGN.md §Static-analysis): the registered
+        Pallas kernel plans (grid/BlockSpec/VMEM/write-race proofs) and
+        the measured traffic matrix of every cached :class:`CellRecord`
+        (symmetry, non-negativity, zero diagonal). Returns the Finding
+        list — ``--lint`` on the launchers gates on error severity."""
+        from repro.analysis import kernels as akernels
+        from repro.analysis import shard_lint
+        findings = []
+        if kernels:
+            findings.extend(akernels.verify_all())
+        if traffic:
+            for rec in self._mem.values():
+                if rec.traffic is None:
+                    continue
+                findings.extend(shard_lint.lint_traffic(
+                    np.asarray(rec.traffic),
+                    subject=f"{rec.arch}/{rec.shape}/{rec.profile}"))
+        return findings
+
     # -- map_step: place an already-built step (train / serve) ------------
 
     def map_step(self, step, step_args, mesh, scan_lengths: Sequence[int],

@@ -8,7 +8,7 @@ dry-run imports it after setting XLA_FLAGS).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

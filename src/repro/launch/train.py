@@ -68,6 +68,20 @@ def searched_mesh(step, step_args, mesh, scan_lengths, map_restarts=32,
                             tag="train-step", machine=machine)
 
 
+def _lint_gate(arch_name: str, profile: str, session) -> None:
+    """``--lint``: kernel registry + this cell's sharding specs, plus any
+    traffic matrices the session has already measured; errors abort."""
+    from repro import analysis
+    from repro.analysis import shard_lint
+    findings = session.verify()
+    findings.extend(shard_lint.lint_cell(arch_name, profile=profile))
+    print(analysis.format_findings(findings), flush=True)
+    errors = analysis.at_least(findings, "error")
+    if errors:
+        raise SystemExit(f"--lint: {len(errors)} error-severity "
+                         "finding(s)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -85,6 +99,10 @@ def main() -> None:
                          "implies --grad-compress; 0 = one scale per "
                          "tensor)")
     ap.add_argument("--topology-aware", action="store_true")
+    ap.add_argument("--lint", action="store_true",
+                    help="before training, static-verify the Pallas kernel "
+                         "registry and this arch/profile's sharding specs "
+                         "(repro.analysis); error findings abort the run")
     ap.add_argument("--map-restarts", type=int, default=32,
                     help="random restarts appended to the mapping search")
     ap.add_argument("--machine", default=None,
@@ -109,6 +127,8 @@ def main() -> None:
     else:
         mesh = session.local_mesh()
     rules = rules_for(arch.family, mesh.axis_names, profile=args.profile)
+    if args.lint:
+        _lint_gate(args.arch, args.profile, session)
 
     if arch.family == "lm":
         from repro.models import transformer as mdl

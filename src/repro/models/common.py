@@ -7,9 +7,8 @@ Parameters are plain nested dicts of jnp arrays; every init function returns
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

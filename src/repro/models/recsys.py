@@ -28,7 +28,6 @@ import numpy as np
 
 from repro.dist.sharding import Rules
 from repro.kernels import ops as kops
-from repro.models.common import dense_init
 from repro.models.gnn import mlp_apply, mlp_init, _mlp_spec
 
 Params = Dict[str, Any]

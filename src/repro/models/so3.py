@@ -18,9 +18,8 @@ Real-SH conventions: l=1 basis ordered (Y_1^{-1}, Y_1^0, Y_1^1) ~ (y, z, x);
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Tuple
+from typing import List
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

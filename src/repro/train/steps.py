@@ -8,11 +8,9 @@ what shrinks the DP all-reduce payload.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.optim import adamw  # noqa: F401 (re-exported for callers)
 

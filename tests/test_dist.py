@@ -83,8 +83,22 @@ def test_sanitize_drops_non_dividing_axis():
     # tuple entry degrades to its dividing prefix, not all-or-nothing
     s = sanitize_spec((4, 8), P(("data", "model"), None), amesh)
     assert tuple(s) == ("data", None)                # 4 % 8 != 0, 4 % 4 == 0
-    # axes the mesh lacks are removed outright
-    s = sanitize_spec((8, 8), P("pod", "model"), amesh)
+    # axes the mesh lacks are removed outright — with a warning, since a
+    # nonexistent axis is almost always a sharding-table typo
+    with pytest.warns(UserWarning, match="pod"):
+        s = sanitize_spec((8, 8), P("pod", "model"), amesh)
+    assert tuple(s) == (None, "model")
+
+
+def test_sanitize_strict_raises_on_missing_axis():
+    amesh = _amesh(data=4, model=2)
+    with pytest.raises(ValueError, match="pod"):
+        sanitize_spec((8, 8), P("pod", "model"), amesh, strict=True)
+    with pytest.raises(ValueError, match="pod"):
+        sanitize_tree((jax.ShapeDtypeStruct((8, 8), jnp.float32),),
+                      (P("pod", None),), amesh, strict=True)
+    # present axes never trigger strict, dividing or not
+    s = sanitize_spec((7, 8), P("data", "model"), amesh, strict=True)
     assert tuple(s) == (None, "model")
 
 

@@ -1,16 +1,15 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode), swept over shapes
 and dtypes, as the assignment requires."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.topology import balanced_tree, flat_topology
+from repro.core.topology import balanced_tree
 from repro.graph.generators import rmat
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.bag_combine import bag_combine
-from repro.kernels.bsr_spmm import bsr_spmm, to_bsr
+from repro.kernels.bsr_spmm import bsr_spmm
 from repro.kernels.partition_gain import partition_gain_ell
 from repro.kernels.quotient_link_loads import quotient_link_loads
 

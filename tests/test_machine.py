@@ -10,9 +10,8 @@ import pytest
 
 from repro.core import machine, mapping, objective, reference
 from repro.core.machine import Level, MachineSpec
-from repro.core.topology import (RoutingTopology, TreeTopology,
-                                 balanced_tree, production_tree,
-                                 with_bin_speed)
+from repro.core.topology import (RoutingTopology, balanced_tree,
+                                 production_tree, with_bin_speed)
 
 
 # ---------------------------------------------------------------------------

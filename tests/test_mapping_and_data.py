@@ -1,8 +1,6 @@
 """Placement glue (block placement, mesh mapping, expert placement) and
 the data pipelines (incl. the fanout neighbor sampler)."""
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import baselines, mapping, objective
 from repro.core.topology import balanced_tree, production_tree

@@ -73,7 +73,7 @@ def test_parse_collectives_traffic_from_real_hlo():
     import jax
     if len(jax.devices()) < 2:
         pytest.skip("needs >= 2 devices for a real collective")
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",))  # pragma: no cover
+    jax.make_mesh((len(jax.devices()),), ("data",))  # pragma: no cover
     # (multi-device CI only; single-device runs take the skip above)
 
 

@@ -12,7 +12,6 @@ from repro.graph.generators import grid2d, rmat, weighted_nodes
 
 def test_brute_force_gap_small():
     """Heuristic within 1.5x of the exact optimum on tiny instances."""
-    rng = np.random.default_rng(0)
     for seed in range(3):
         g = rmat(8, 20, seed=seed)
         topo = flat_topology(2, F=1.0)

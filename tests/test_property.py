@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import objective, reference
 from repro.core.mapping import block_placement
-from repro.core.topology import balanced_tree, flat_topology
+from repro.core.topology import balanced_tree
 from repro.graph.graph import from_edges, permute
 
 
