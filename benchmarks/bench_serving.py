@@ -1,0 +1,108 @@
+"""Serving throughput: continuous vs static batching through the paged
+KV cache at N concurrent mixed-length streams (tokens/s, p50/p99 latency
+and TTFT in decode steps), plus the drift-triggered placement policy on.
+
+The continuous >= static claim IS the point of the subsystem — the bench
+raises when continuous batching loses on decode steps or falls visibly
+behind on tokens/s, the same fail-the-gate style as the placement bench's
+heterogeneous claims. Rows land in ``BENCH_serving.json`` so the
+BENCH_SMOKE regression gate (scripts/bench_compare.py) covers the serving
+wall-clock. Throughput fields are named ``tok_per_sec`` on purpose: a
+``*_s`` suffix would be gated as seconds, and faster serving must not
+fail the gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, tiny
+from repro import configs
+from repro.dist.sharding import lm_rules
+from repro.models import transformer as tr
+from repro.serving import EngineConfig, ServingEngine
+
+
+def _workload(cfg, n_req, max_prompt, max_gen, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab, int(rng.integers(2, max_prompt + 1)),
+                          dtype=np.int64).astype(np.int32),
+             int(rng.integers(1, max_gen + 1))) for _ in range(n_req)]
+
+
+def _serve(params, cfg, rules, work, **ecfg_kw):
+    eng = ServingEngine(params, cfg, rules, EngineConfig(**ecfg_kw))
+    for prompt, gen in work:
+        eng.submit(prompt, gen)
+    return eng.run()
+
+
+def _row(name, rep):
+    emit("serving", name, rep.wall_s, steps=rep.steps,
+         tok_per_sec=rep.tok_per_s, p50=rep.latency_steps_p50,
+         p99=rep.latency_steps_p99, occupancy=rep.mean_batch_occupancy)
+    return {"name": name, "serve_s": rep.wall_s,
+            "tok_per_sec": rep.tok_per_s, "steps": rep.steps,
+            "tokens_out": rep.tokens_out,
+            "latency_p50": rep.latency_steps_p50,
+            "latency_p99": rep.latency_steps_p99,
+            "ttft_p50": rep.ttft_steps_p50,
+            "ttft_p99": rep.ttft_steps_p99,
+            "occupancy": rep.mean_batch_occupancy}
+
+
+def serving_throughput() -> list:
+    """Continuous vs static batching on the same mixed-length stream, and
+    continuous again with the page-placement policy on."""
+    cfg = configs.get("qwen2-1.5b").smoke_config()
+    rules = lm_rules(())
+    params, _ = tr.init(jax.random.PRNGKey(0), cfg, rules)
+    n_req, slots, max_prompt, max_gen = tiny((32, 8, 24, 16),
+                                             (12, 4, 8, 6))
+    page = tiny(8, 4)
+    work = _workload(cfg, n_req, max_prompt, max_gen)
+    max_pages = -(-max(p.shape[0] + g for p, g in work) // page)
+    kw = dict(n_slots=slots, page_size=page,
+              n_pages=max_pages * slots * 2, max_pages_per_req=max_pages,
+              temperature=0.8, seed=0)
+    # engines share one compiled step per (cfg, rules); pay it untimed
+    _serve(params, cfg, rules, work[:1], **kw)
+    cont = _serve(params, cfg, rules, work, **kw)
+    stat = _serve(params, cfg, rules, work, static_batching=True, **kw)
+    placed = _serve(params, cfg, rules, work, replace_every=8,
+                    place_devices=4, **kw)
+    # the subsystem's claims — fail the smoke gate if they ever break
+    if cont.steps > stat.steps:
+        raise AssertionError(
+            f"continuous batching took {cont.steps} steps, static only "
+            f"{stat.steps} — admission is broken")
+    if cont.tok_per_s < 0.9 * stat.tok_per_s:
+        raise AssertionError(
+            f"continuous {cont.tok_per_s} tok/s fell behind static "
+            f"{stat.tok_per_s} tok/s at {slots} concurrent streams")
+    if {r["rid"]: r["generated"] for r in placed.requests} != \
+            {r["rid"]: r["generated"] for r in cont.requests}:
+        raise AssertionError("page re-placement changed the sampled "
+                             "tokens — placement must be transparent")
+    rows = [_row(f"continuous_x{slots}", cont),
+            _row(f"static_x{slots}", stat),
+            _row(f"continuous_placed_x{slots}", placed)]
+    rows[2]["replacements"] = sum(1 for p in placed.placements
+                                  if p["replaced"])
+    return rows
+
+
+def run() -> None:
+    rows = serving_throughput()
+    out = {"serving": rows,
+           "tiny": os.environ.get("REPRO_BENCH_TINY", "") == "1"}
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote BENCH_serving.json ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    run()

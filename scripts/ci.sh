@@ -32,6 +32,12 @@ if [[ "${BENCH_SMOKE:-0}" == "1" ]]; then
   python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k \
     --machine gpu-superpod --topology-aware \
     --override n_layers=1 --override batch=2 --override seq=8
+  echo "== serving smoke (continuous batching + page placement) =="
+  # a tiny stream through the real engine: FIFO admission, paged decode,
+  # one drift-placement epoch — end-to-end, not just the unit tests
+  python -m repro.launch.serve --arch qwen2-1.5b --smoke --stream \
+    --num-requests 8 --prompt-len 8 --gen-len 8 --slots 4 --page-size 4 \
+    --replace-every 8 --place-devices 4 --seed 0
   echo "== benchmark smoke tier (REPRO_BENCH_TINY=1) =="
   for b in benchmarks/bench_*.py; do
     mod="benchmarks.$(basename "$b" .py)"

@@ -1,12 +1,15 @@
 """``python -m repro.analysis`` — the static-analysis CLI and CI gate.
 
-Runs the kernel verifier over every registered Pallas kernel plan and the
-sharding lint over the lm/gnn/recsys profile representatives, prints the
+Runs the kernel verifier over every registered Pallas kernel plan, the
+sharding lint over the lm/gnn/recsys profile representatives, and the
+serving lint (a synthetic request stream through the real scheduler,
+checking the page-traffic matrix fed to the page mapper); prints the
 findings, optionally writes them as structured JSON (the CI artifact), and
 exits nonzero when any finding reaches ``--severity`` (default ``error``).
 
     PYTHONPATH=src python -m repro.analysis                  # full suite
     PYTHONPATH=src python -m repro.analysis --suite kernels
+    PYTHONPATH=src python -m repro.analysis --suite serving
     PYTHONPATH=src python -m repro.analysis --severity error \
         --json analysis_findings.json                        # the CI gate
     PYTHONPATH=src python -m repro.analysis --arch qwen2-72b --no-trace
@@ -33,6 +36,52 @@ def run_kernel_suite() -> List[Finding]:
     return akernels.verify_all()
 
 
+def run_serving_suite() -> List[Finding]:
+    """Drive a small synthetic request stream through the real serving
+    scheduler + paged-cache bookkeeping (host-side only, no decode) and
+    lint the page-traffic matrix it would hand
+    ``PlacementSession.map_pages`` — the same ``lint_traffic`` invariants
+    as device traffic: square, finite, symmetric, zero diagonal. A
+    violation here means the serving layer feeds the mapper garbage."""
+    import numpy as np
+
+    from repro.analysis import shard_lint
+    from repro.serving import PagedKVCache, Request, Scheduler
+    findings: List[Finding] = []
+    cache = PagedKVCache(n_pages=16, page_size=2, n_slots=3,
+                         max_pages_per_req=8)
+    sched = Scheduler(cache)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        sched.submit(Request(
+            rid=i, prompt=np.zeros(int(rng.integers(2, 9)), np.int32),
+            max_new_tokens=int(rng.integers(1, 6))), step=0)
+    step = 0
+    while sched.has_work():
+        sched.admit(step)
+        inputs = sched.step_inputs()
+        cache.record_access({si.slot: si.pos + 1 for si in inputs})
+        for si in inputs:
+            sched.advance(si.slot, step,
+                          0 if si.needs_sample else None)
+        try:
+            sched.check_invariants()
+        except AssertionError as exc:
+            findings.append(Finding(
+                "serving-invariant", "error", f"serving:step{step}",
+                f"scheduler/cache invariant violated: {exc}"))
+            return findings
+        step += 1
+    findings.extend(shard_lint.lint_traffic(cache.page_traffic(),
+                                            subject="serving:page-traffic"))
+    if cache.allocator.n_free != cache.n_pages:
+        findings.append(Finding(
+            "serving-leak", "error", "serving:drain",
+            f"{cache.n_pages - cache.allocator.n_free} page(s) still "
+            "owned after the stream drained"))
+    return findings
+
+
 def run_sharding_suite(archs, *, trace: bool = True) -> List[Finding]:
     from repro import configs
     from repro.analysis import shard_lint
@@ -50,7 +99,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="static kernel/sharding verifier (no execution)")
-    ap.add_argument("--suite", choices=("all", "kernels", "sharding"),
+    ap.add_argument("--suite",
+                    choices=("all", "kernels", "sharding", "serving"),
                     default="all")
     ap.add_argument("--severity", choices=analysis.SEVERITIES,
                     default="error",
@@ -73,6 +123,8 @@ def main(argv=None) -> int:
     if args.suite in ("all", "sharding"):
         findings.extend(run_sharding_suite(args.arch or DEFAULT_ARCHS,
                                            trace=not args.no_trace))
+    if args.suite in ("all", "serving"):
+        findings.extend(run_serving_suite())
 
     shown = (analysis.at_least(findings, args.severity) if args.quiet
              else findings)

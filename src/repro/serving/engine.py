@@ -1,0 +1,269 @@
+"""The serving engine: continuous-batching stream loop over the paged
+cache, with request metrics and drift-triggered page re-placement.
+
+One engine step = one batched ``paged_decode_step`` over every active
+slot (mixed prompt/gen positions batch together), then per-slot
+bookkeeping: prompt slots feed their next prompt token, decode slots
+sample. Sampling keys are ``fold_in(fold_in(base, rid), pos)`` — a
+function of the request and token position only — so generated tokens
+are bit-identical regardless of batch composition, admission order or
+slot count (pinned by test, and the fix for the old ``serve.py`` having
+no ``--seed`` at all).
+
+Placement: every ``replace_every`` steps the engine closes a traffic
+epoch, feeds the measured page co-access graph to
+``PlacementSession.map_pages`` (pages-as-rows, the paper's makespan
+objective over the machine tree) and applies the returned page -> device
+assignment — physically reordering the pool — when the current
+placement's makespan on the NEW traffic exceeds the searched one by more
+than ``drift_threshold`` (DESIGN.md §Serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.scheduler import Request, Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4               # max concurrent streams
+    page_size: int = 8             # tokens per KV page
+    n_pages: int = 64              # physical pages in the pool
+    max_pages_per_req: int = 16    # page-table width per slot
+    temperature: float = 0.8       # 0 = greedy
+    seed: int = 0                  # sampling PRNG (per-request folded)
+    static_batching: bool = False  # admit only into an idle batch (bench)
+    # -- placement policy --
+    replace_every: int = 0         # steps per traffic epoch; 0 = off
+    drift_threshold: float = 0.1   # re-place when old/new makespan > 1+thr
+    place_devices: int = 0         # placement bins; 0 = jax.device_count()
+    machine: Optional[str] = None  # machine preset for the page topology
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Stream-level metrics (JSON-native throughout, so ``--trace`` just
+    dumps it)."""
+    n_requests: int
+    steps: int
+    wall_s: float
+    tokens_out: int
+    tok_per_s: float
+    latency_steps_p50: float       # submit -> done, in decode steps
+    latency_steps_p99: float
+    ttft_steps_p50: float          # submit -> first sampled token
+    ttft_steps_p99: float
+    mean_batch_occupancy: float    # active slots per step / n_slots
+    placements: List[Dict[str, Any]]
+    requests: List[Dict[str, Any]]
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1)
+
+    def summary(self) -> str:
+        return (f"[SERVE] {self.n_requests} requests in {self.steps} "
+                f"steps / {self.wall_s:.2f}s -> {self.tokens_out} tokens "
+                f"({self.tok_per_s:.1f} tok/s) "
+                f"latency p50/p99 = {self.latency_steps_p50:.0f}/"
+                f"{self.latency_steps_p99:.0f} steps, ttft p50/p99 = "
+                f"{self.ttft_steps_p50:.0f}/{self.ttft_steps_p99:.0f}, "
+                f"occupancy {self.mean_batch_occupancy:.2f}, "
+                f"replacements "
+                f"{sum(1 for p in self.placements if p['replaced'])}")
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_decode(cfg, rules):
+    """One compiled paged step per (cfg, rules) — engines share it, so a
+    bench spinning up several engines (continuous vs static vs placed)
+    compiles once instead of per engine."""
+    import functools
+
+    import jax
+
+    from repro.serving.paged_decode import paged_decode_step
+    return jax.jit(
+        functools.partial(paged_decode_step, cfg=cfg, rules=rules),
+        donate_argnums=(1, 2))
+
+
+class ServingEngine:
+    """Ties scheduler + paged cache + the jitted paged decode step into
+    one stream loop. ``session`` is an optional
+    ``launch.placement.PlacementSession`` (one is created lazily when the
+    placement policy is on)."""
+
+    def __init__(self, params, cfg, rules, ecfg: EngineConfig,
+                 session: Optional[Any] = None):
+        import jax
+
+        self.params = params
+        self.cfg = cfg
+        self.rules = rules
+        self.ecfg = ecfg
+        self.cache = PagedKVCache(ecfg.n_pages, ecfg.page_size,
+                                  ecfg.n_slots, ecfg.max_pages_per_req,
+                                  cfg=cfg)
+        self.scheduler = Scheduler(self.cache)
+        self.session = session
+        self.page_to_device: Optional[np.ndarray] = None
+        self.placements: List[Dict[str, Any]] = []
+        self._rid = 0
+        self._step = 0
+        self._occupancy: List[int] = []
+        self._base_key = jax.random.PRNGKey(ecfg.seed)
+
+        self._decode = _jitted_decode(cfg, rules)
+
+        temp = ecfg.temperature
+        base = self._base_key
+
+        def sample(logits, rids, poss):
+            # key = f(request id, token position) only: generated tokens
+            # are invariant to batch composition and slot count
+            keys = jax.vmap(
+                lambda r, p: jax.random.fold_in(
+                    jax.random.fold_in(base, jax.numpy.maximum(r, 0)), p)
+            )(rids, poss)
+            if temp <= 0:
+                return jax.numpy.argmax(logits, axis=-1)
+            return jax.vmap(
+                lambda k, lg: jax.random.categorical(k, lg / temp)
+            )(keys, logits)
+
+        self._sample = jax.jit(sample)
+
+    # -- intake ----------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
+        req = Request(rid=self._rid,
+                      prompt=np.asarray(prompt, dtype=np.int32),
+                      max_new_tokens=int(max_new_tokens))
+        self._rid += 1
+        self.scheduler.submit(req, step=self._step)
+        return req
+
+    # -- the stream loop -------------------------------------------------
+
+    def step(self) -> None:
+        """One engine step: admit, batched decode, sample, advance."""
+        import jax.numpy as jnp
+        ecfg = self.ecfg
+        self.scheduler.admit(self._step,
+                             only_when_idle=ecfg.static_batching)
+        inputs = self.scheduler.step_inputs()
+        if not inputs:
+            if self.scheduler.queue:
+                raise RuntimeError(
+                    "no active slot and the queue head cannot be "
+                    "admitted — infeasible request escaped submit()")
+            return
+        n = self.cache.n_slots
+        tokens = np.zeros((n, 1), dtype=np.int32)
+        lengths = np.zeros((n,), dtype=np.int32)
+        rids = np.full((n,), -1, dtype=np.int32)
+        for si in inputs:
+            tokens[si.slot, 0] = si.token
+            lengths[si.slot] = si.pos
+            rids[si.slot] = si.rid
+        logits, self.cache.k_pool, self.cache.v_pool = self._decode(
+            self.params, self.cache.k_pool, self.cache.v_pool,
+            jnp.asarray(self.cache.page_table), jnp.asarray(lengths),
+            jnp.asarray(tokens))
+        sampled = np.asarray(self._sample(logits, jnp.asarray(rids),
+                                          jnp.asarray(lengths)))
+        # the step read pages [0, pos] of every active slot
+        self.cache.record_access({si.slot: si.pos + 1 for si in inputs})
+        self._occupancy.append(len(inputs))
+        for si in inputs:
+            self.scheduler.advance(
+                si.slot, self._step,
+                int(sampled[si.slot]) if si.needs_sample else None)
+        self._step += 1
+        if (ecfg.replace_every > 0
+                and self._step % ecfg.replace_every == 0):
+            self._maybe_replace()
+
+    def run(self) -> ServeReport:
+        """Drain the queue; return the stream report."""
+        t0 = time.time()
+        while self.scheduler.has_work():
+            self.step()
+        return self._report(time.time() - t0)
+
+    # -- placement policy ------------------------------------------------
+
+    def _maybe_replace(self) -> None:
+        traffic = self.cache.page_traffic()
+        if traffic.sum() <= 0:
+            return
+        if self.session is None:
+            from repro.launch.placement import PlacementSession
+            # in-memory only: page placement never touches the compile
+            # cache tier
+            self.session = PlacementSession(cache_dir="")
+        import jax
+        n_dev = self.ecfg.place_devices or jax.device_count()
+        placement = self.session.map_pages(
+            traffic, node_weight=self.cache.page_weight(),
+            n_devices=n_dev, machine=self.ecfg.machine,
+            current=self.page_to_device)
+        apply = (self.page_to_device is None
+                 or placement.drift_ratio
+                 > 1.0 + self.ecfg.drift_threshold)
+        if apply:
+            perm = self.cache.apply_placement(placement.page_to_device)
+            moved = int((perm != np.arange(self.cache.n_pages)).sum())
+            # relabel the assignment into the new physical order
+            new_asg = np.empty_like(placement.page_to_device)
+            new_asg[perm] = placement.page_to_device
+            self.page_to_device = new_asg
+            placement.replaced = True
+        else:
+            moved = 0
+        self.placements.append({
+            "step": self._step, "n_devices": placement.n_devices,
+            "makespan": placement.makespan,
+            "drift_ratio": (None if not np.isfinite(placement.drift_ratio)
+                            else float(placement.drift_ratio)),
+            "replaced": bool(placement.replaced), "pages_moved": moved})
+        self.cache.reset_traffic()
+
+    # -- metrics ---------------------------------------------------------
+
+    def _report(self, wall_s: float) -> ServeReport:
+        done = self.scheduler.completed
+        lat = np.asarray([r.done_step - r.submit_step + 1 for r in done],
+                         dtype=np.float64)
+        ttft = np.asarray([r.first_token_step - r.submit_step + 1
+                           for r in done], dtype=np.float64)
+        tokens_out = int(sum(len(r.generated) for r in done))
+
+        def pct(a, q):
+            return float(np.percentile(a, q)) if a.size else 0.0
+
+        occ = (float(np.mean(self._occupancy)) / self.cache.n_slots
+               if self._occupancy else 0.0)
+        return ServeReport(
+            n_requests=len(done), steps=self._step,
+            wall_s=round(wall_s, 4), tokens_out=tokens_out,
+            tok_per_s=round(tokens_out / wall_s, 2) if wall_s > 0 else 0.0,
+            latency_steps_p50=pct(lat, 50), latency_steps_p99=pct(lat, 99),
+            ttft_steps_p50=pct(ttft, 50), ttft_steps_p99=pct(ttft, 99),
+            mean_batch_occupancy=round(occ, 4),
+            placements=list(self.placements),
+            requests=[{
+                "rid": r.rid, "prompt_len": r.prompt_len,
+                "max_new_tokens": r.max_new_tokens,
+                "submit_step": r.submit_step, "admit_step": r.admit_step,
+                "first_token_step": r.first_token_step,
+                "done_step": r.done_step, "generated": list(r.generated),
+            } for r in done])

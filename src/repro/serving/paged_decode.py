@@ -1,0 +1,136 @@
+"""One continuous-batching decode step over the paged KV cache.
+
+Mirrors ``models.transformer.decode_step`` (GQA path) with two changes:
+
+  * per-request positions: ``lengths[b]`` is the number of tokens already
+    cached for slot ``b`` — the new token is written there and the causal
+    mask is per-row, so mixed prompt/gen lengths batch together;
+  * K/V live in page pools ``[n_layers, n_pages + 1, page_size, kh, dh]``
+    and are addressed through per-slot page tables, so any physical page
+    order (fragmented, placement-permuted) produces the same logits.
+
+The arithmetic (einsum contractions, masked softmax, f32 accumulation) is
+kept operation-for-operation identical to ``_decode_attn_gqa`` — the
+paged-vs-dense equivalence test in ``tests/test_serving.py`` pins the
+logits allclose, which is what makes the paged cache a drop-in serving
+substrate rather than a lookalike.
+
+Idle slots are harmless by construction: the engine points them at the
+sentinel page (index ``n_pages``) with ``lengths = 0``, so they write
+only the sentinel, attend over exactly one finite position, and their
+logits are discarded.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import Rules
+from repro.models import common
+from repro.models.common import rms_norm, rope_freqs
+from repro.models.transformer import (Params, TransformerConfig, _partial_rope,
+                                      moe_ffn)
+
+
+def _paged_attn_gqa(p: Params, x: jnp.ndarray, k_l: jnp.ndarray,
+                    v_l: jnp.ndarray, page_table: jnp.ndarray,
+                    lengths: jnp.ndarray, cfg: TransformerConfig,
+                    angles: jnp.ndarray):
+    """x: [B, 1, D]; k_l/v_l: [n_pages + 1, P, kh, dh]; returns the
+    attention output and the updated layer pools."""
+    b, _, d = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kh
+    page = k_l.shape[1]
+    q = x @ p["w_q"]
+    kk = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if cfg.qkv_bias:
+        q, kk, v = q + p["b_q"], kk + p["b_k"], v + p["b_v"]
+    ang = angles[lengths][:, None, :]                     # [B, 1, dh/2]
+    q = _partial_rope(q.reshape(b, 1, h, dh), ang, cfg.rope_fraction)
+    kk = _partial_rope(kk.reshape(b, 1, kh, dh), ang, cfg.rope_fraction)
+    v = v.reshape(b, 1, kh, dh)
+
+    # write the new token through the page table, then read the full
+    # (updated) history back through it — scatter before gather
+    phys = page_table[jnp.arange(b), lengths // page]     # [B]
+    off = lengths % page
+    k_l = k_l.at[phys, off].set(kk[:, 0])
+    v_l = v_l.at[phys, off].set(v[:, 0])
+    k_cache = k_l[page_table].reshape(b, -1, kh, dh)      # [B, max_s, ...]
+    v_cache = v_l[page_table].reshape(b, -1, kh, dh)
+    max_s = k_cache.shape[1]
+    mask = (jnp.arange(max_s)[None, :]
+            <= lengths[:, None])[:, :, None, None, None]
+
+    qh = q.reshape(b, 1, kh, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bkhgq", qh, k_cache,
+                   preferred_element_type=jnp.float32) / np.sqrt(dh)
+    s = jnp.where(mask, s, -jnp.inf)
+    pmax = s.max(axis=1, keepdims=True)
+    e = jnp.exp(s - pmax)
+    num = jnp.einsum("bkhgq,bkhd->bqhgd", e.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    den = e.sum(axis=1).reshape(b, kh, g, 1)[:, None]
+    o = (num / den).astype(x.dtype).reshape(b, 1, h * dh)
+    return o @ p["w_o"], k_l, v_l
+
+
+def paged_decode_step(params: Params, k_pool: jnp.ndarray,
+                      v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                      lengths: jnp.ndarray, tokens: jnp.ndarray,
+                      cfg: TransformerConfig, rules: Rules
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """tokens [B, 1] int32, lengths [B] int32, page_table [B, max_pages]
+    int32 -> (logits [B, V], new k_pool, new v_pool)."""
+    if cfg.mla:
+        raise NotImplementedError("paged decode serves the GQA cache "
+                                  "layout (see PagedKVCache)")
+    b = tokens.shape[0]
+    max_seq = page_table.shape[1] * k_pool.shape[2]
+    angles = rope_freqs(cfg.head_dim, max_seq, cfg.rope_theta)
+    x = rules.shard(params["embed"][tokens], "batch", None, None)
+    n_dense = cfg.n_dense_layers if cfg.moe else cfg.n_layers
+
+    def run_stack(x, stacked, k_slice, v_slice, moe_layer):
+        def body(carry, inp):
+            xc = carry
+            layer_p, k_l, v_l = inp
+            hn = rms_norm(xc, layer_p["ln1"])
+            o, k_l, v_l = _paged_attn_gqa(layer_p["attn"], hn, k_l, v_l,
+                                          page_table, lengths, cfg, angles)
+            xc = xc + o
+            hn2 = rms_norm(xc, layer_p["ln2"])
+            if moe_layer:
+                y, _ = moe_ffn(layer_p["ffn"], hn2.reshape(b, -1), cfg,
+                               rules)
+                y = y.reshape(xc.shape)
+            else:
+                y = common.swiglu(hn2, layer_p["ffn"]["w_gate"],
+                                  layer_p["ffn"]["w_up"],
+                                  layer_p["ffn"]["w_down"])
+            return xc + y, (k_l, v_l)
+
+        return jax.lax.scan(body, x, (stacked, k_slice, v_slice))
+
+    ks, vs = [], []
+    if "dense_layers" in params:
+        x, (kd, vd) = run_stack(x, params["dense_layers"],
+                                k_pool[:n_dense], v_pool[:n_dense], False)
+        ks.append(kd)
+        vs.append(vd)
+    if "moe_layers" in params:
+        x, (km, vm) = run_stack(x, params["moe_layers"], k_pool[n_dense:],
+                                v_pool[n_dense:], True)
+        ks.append(km)
+        vs.append(vm)
+    new_k = ks[0] if len(ks) == 1 else jnp.concatenate(ks)
+    new_v = vs[0] if len(vs) == 1 else jnp.concatenate(vs)
+
+    x = rms_norm(x, params["ln_f"])
+    logits = rules.shard(x[:, 0] @ params["unembed"], "batch", "vocab")
+    return logits, new_k, new_v

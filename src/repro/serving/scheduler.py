@@ -1,0 +1,185 @@
+"""Continuous-batching scheduler: FIFO admit, completion evict, page
+backpressure. Pure host bookkeeping (no JAX) so the Hypothesis suite can
+drive random request streams through the real code.
+
+State machine per request (DESIGN.md §Serving):
+
+    QUEUED --admit (slot free AND pages free)--> PREFILL
+    PREFILL --one prompt token per step--> DECODE (first sampled token)
+    DECODE --max_new_tokens sampled--> DONE (pages freed, slot freed)
+
+Admission is strictly FIFO and reserves every page of the request's
+lifetime (``ceil((prompt + gen) / page_size)``) up front: the head of the
+queue blocks until it fits, so nothing overtakes it (no starvation) and
+an admitted request can always finish (no page deadlock). Each admitted
+request advances exactly one token per engine step — during PREFILL the
+fed token comes from the prompt, during DECODE from the previous sample —
+so steps-to-first-token after admission is exactly ``prompt_len``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.kv_cache import PagedKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request and its lifecycle trace (step indices are
+    engine decode steps, -1 until reached)."""
+    rid: int
+    prompt: np.ndarray                 # [prompt_len] int32
+    max_new_tokens: int
+    submit_step: int = -1
+    admit_step: int = -1
+    first_token_step: int = -1
+    done_step: int = -1
+    slot: int = -1
+    pos: int = 0                       # tokens already in the cache
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class StepInput:
+    """What one active slot feeds the batched decode this step."""
+    slot: int
+    rid: int
+    token: int                         # seq[pos]: prompt or last sample
+    pos: int                           # cache length before this step
+    needs_sample: bool                 # logits of this step are consumed
+
+
+class Scheduler:
+    def __init__(self, cache: PagedKVCache):
+        self.cache = cache
+        self.n_slots = cache.n_slots
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}
+        self.completed: List[Request] = []
+        self._free_slots = list(range(cache.n_slots - 1, -1, -1))
+
+    # -- intake ----------------------------------------------------------
+
+    def submit(self, req: Request, step: int = 0) -> None:
+        need = self.cache.pages_needed(req.total_tokens)
+        if need > self.cache.max_pages_per_req:
+            raise ValueError(
+                f"request {req.rid}: {req.total_tokens} tokens need "
+                f"{need} pages > max_pages_per_req="
+                f"{self.cache.max_pages_per_req}")
+        if need > self.cache.n_pages:
+            raise ValueError(
+                f"request {req.rid}: needs {need} pages, pool has "
+                f"{self.cache.n_pages} — can never be admitted")
+        if req.prompt_len < 1 or req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: prompt and gen lengths "
+                             "must both be >= 1")
+        req.submit_step = step
+        self.queue.append(req)
+
+    # -- per-step control ------------------------------------------------
+
+    def admit(self, step: int, *, only_when_idle: bool = False
+              ) -> List[Request]:
+        """FIFO admission under slot + page backpressure. The head blocks
+        the queue when it does not fit (no overtaking). With
+        ``only_when_idle`` admission waits for an empty batch — the
+        static-batching baseline the bench compares against."""
+        admitted: List[Request] = []
+        if only_when_idle and self.active:
+            return admitted
+        while self.queue and self._free_slots:
+            head = self.queue[0]
+            if not self.cache.can_admit(head.total_tokens):
+                break
+            req = self.queue.popleft()
+            slot = self._free_slots.pop()
+            self.cache.assign_slot(slot, req.total_tokens)
+            req.slot = slot
+            req.admit_step = step
+            req.pos = 0
+            self.active[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def step_inputs(self) -> List[StepInput]:
+        """The token each active slot feeds this step (its ``pos``-th
+        sequence token) and whether this step's logits get sampled."""
+        out = []
+        for slot in sorted(self.active):
+            req = self.active[slot]
+            if req.pos < req.prompt_len:
+                token = int(req.prompt[req.pos])
+            else:
+                token = req.generated[req.pos - req.prompt_len]
+            out.append(StepInput(slot=slot, rid=req.rid, token=token,
+                                 pos=req.pos,
+                                 needs_sample=req.pos + 1 >= req.prompt_len))
+        return out
+
+    def advance(self, slot: int, step: int,
+                sampled: Optional[int] = None) -> Optional[Request]:
+        """Consume one step for ``slot``: the fed token is now cached;
+        ``sampled`` is this step's sampled token when the slot was in
+        (or entering) DECODE. Returns the request when it completed (its
+        pages are already back on the free list)."""
+        req = self.active[slot]
+        needed = req.pos + 1 >= req.prompt_len
+        if needed != (sampled is not None):
+            raise ValueError(f"slot {slot}: sample "
+                             f"{'missing' if needed else 'unexpected'} at "
+                             f"pos {req.pos}")
+        req.pos += 1
+        if sampled is not None:
+            if req.first_token_step < 0:
+                req.first_token_step = step
+            req.generated.append(int(sampled))
+            if req.done:
+                req.done_step = step
+                self.cache.release_slot(slot)
+                del self.active[slot]
+                self._free_slots.append(slot)
+                req.slot = -1
+                self.completed.append(req)
+                return req
+        return None
+
+    # -- predicates ------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    def check_invariants(self) -> None:
+        """Structural invariants on top of the cache's: slot maps are
+        mutually consistent and every active request holds exactly its
+        reserved page count."""
+        self.cache.check_invariants()
+        live = self.cache.live_page_sets()
+        if set(live) != set(self.active):
+            raise AssertionError(f"cache slots {sorted(live)} != active "
+                                 f"slots {sorted(self.active)}")
+        for slot, req in self.active.items():
+            need = self.cache.pages_needed(req.total_tokens)
+            if len(live[slot]) != need:
+                raise AssertionError(
+                    f"slot {slot} holds {len(live[slot])} pages, "
+                    f"reserved {need}")
+        overlap = set(self._free_slots) & set(self.active)
+        if overlap:
+            raise AssertionError(f"slots both free and active: {overlap}")

@@ -205,6 +205,70 @@ def test_capacity_normalized_objective_equals_oracle(gtp):
     assert abs(float(br.makespan) - m_ref) <= 1e-3 * max(1.0, m_ref)
 
 
+@st.composite
+def request_streams(draw):
+    """Random serving workloads against a random-size paged pool: request
+    (prompt, gen) lengths, staggered submit steps, slot/page-pool shapes
+    sized so every request is feasible (infeasible ones are a submit()
+    ValueError, pinned in tests/test_serving.py)."""
+    page_size = draw(st.integers(1, 4))
+    n_slots = draw(st.integers(1, 4))
+    n_req = draw(st.integers(1, 10))
+    reqs = [(draw(st.integers(1, 9)), draw(st.integers(1, 6)))
+            for _ in range(n_req)]
+    max_need = max(-(-(p + g) // page_size) for p, g in reqs)
+    max_pages = draw(st.integers(max_need, max_need + 3))
+    n_pages = draw(st.integers(max_need, max_need * n_slots + 4))
+    seed = draw(st.integers(0, 2 ** 16))
+    return page_size, n_slots, n_pages, max_pages, reqs, seed
+
+
+@given(request_streams())
+@settings(max_examples=60, deadline=None)
+def test_scheduler_invariants_under_random_streams(stream):
+    """The serving scheduler under random request streams: no page is ever
+    owned by two live requests, pages in flight never exceed the pool,
+    completed requests return every page to the free list, admitted
+    requests never starve (first token exactly prompt_len steps after
+    admission) and the whole stream drains within the token budget — all
+    preserved under random mid-stream page re-placements."""
+    from repro.serving import PagedKVCache, Request, Scheduler
+    page_size, n_slots, n_pages, max_pages, reqs, seed = stream
+    cache = PagedKVCache(n_pages, page_size, n_slots, max_pages)
+    sched = Scheduler(cache)
+    rng = np.random.default_rng(seed)
+    submits = sorted(int(rng.integers(0, 4)) for _ in reqs)
+    pending = [(s, Request(rid=i, prompt=np.zeros(p, np.int32),
+                           max_new_tokens=g))
+               for i, ((p, g), s) in enumerate(zip(reqs, submits))]
+    # every step with active work advances >= 1 token; idle steps only
+    # happen before the last submit arrives
+    bound = sum(p + g for p, g in reqs) + max(submits) + 1
+    step = 0
+    while pending or sched.has_work():
+        assert step <= bound, "scheduler failed to make progress"
+        while pending and pending[0][0] <= step:
+            sched.submit(pending.pop(0)[1], step=step)
+        sched.admit(step)
+        for si in sched.step_inputs():
+            sched.advance(si.slot, step, 0 if si.needs_sample else None)
+        sched.check_invariants()
+        live = [p for v in cache.live_page_sets().values() for p in v]
+        assert len(live) == len(set(live))           # no double ownership
+        assert len(live) + cache.allocator.n_free == n_pages
+        if rng.random() < 0.15:                      # placement mid-stream
+            cache.apply_placement(rng.integers(0, 3, n_pages))
+            sched.check_invariants()
+        step += 1
+    assert cache.allocator.n_free == n_pages         # full drain
+    assert len(sched.completed) == len(reqs)
+    for r in sched.completed:
+        assert r.admit_step >= r.submit_step >= 0
+        assert r.first_token_step - r.admit_step == r.prompt_len - 1
+        assert r.done_step >= r.first_token_step
+        assert len(r.generated) == r.max_new_tokens
+
+
 @given(st.integers(0, 100))
 @settings(max_examples=20, deadline=None)
 def test_monotone_edge_addition(seed):
