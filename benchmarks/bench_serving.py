@@ -5,7 +5,10 @@ and TTFT in decode steps), plus the drift-triggered placement policy on.
 The continuous >= static claim IS the point of the subsystem — the bench
 raises when continuous batching loses on decode steps or falls visibly
 behind on tokens/s, the same fail-the-gate style as the placement bench's
-heterogeneous claims. Rows land in ``BENCH_serving.json`` so the
+heterogeneous claims. The chaos row injects one leaf death mid-stream
+and gates the recovery claims the same way: zero failed requests,
+survivor tokens bit-identical to the clean run, step overhead bounded by
+the replayed tokens plus backoff. Rows land in ``BENCH_serving.json`` so the
 BENCH_SMOKE regression gate (scripts/bench_compare.py) covers the serving
 wall-clock. Throughput fields are named ``tok_per_sec`` on purpose: a
 ``*_s`` suffix would be gated as seconds, and faster serving must not
@@ -33,8 +36,9 @@ def _workload(cfg, n_req, max_prompt, max_gen, seed=0):
              int(rng.integers(1, max_gen + 1))) for _ in range(n_req)]
 
 
-def _serve(params, cfg, rules, work, **ecfg_kw):
-    eng = ServingEngine(params, cfg, rules, EngineConfig(**ecfg_kw))
+def _serve(params, cfg, rules, work, injector=None, **ecfg_kw):
+    eng = ServingEngine(params, cfg, rules, EngineConfig(**ecfg_kw),
+                        injector=injector)
     for prompt, gen in work:
         eng.submit(prompt, gen)
     return eng.run()
@@ -92,6 +96,37 @@ def serving_throughput() -> list:
             _row(f"continuous_placed_x{slots}", placed)]
     rows[2]["replacements"] = sum(1 for p in placed.placements
                                   if p["replaced"])
+
+    # chaos row: one leaf death mid-stream through the placed engine.
+    # The subsystem's recovery claims gate the smoke tier: every request
+    # completes, survivors are bit-identical to the clean placed run, and
+    # the step overhead is bounded by the replayed work plus backoff.
+    from repro.resilience import FaultEvent, FaultInjector, FaultPlan
+    death_step = max(2, cont.steps // 3)
+    plan = FaultPlan((FaultEvent(death_step, "leaf_death", 1),))
+    chaos = _serve(params, cfg, rules, work, replace_every=8,
+                   place_devices=4, injector=FaultInjector(plan), **kw)
+    if chaos.failed:
+        raise AssertionError(
+            f"{len(chaos.failed)} feasible request(s) failed under one "
+            f"leaf death with retries available: {chaos.failed}")
+    if {r["rid"]: r["generated"] for r in chaos.requests} != \
+            {r["rid"]: r["generated"] for r in cont.requests}:
+        raise AssertionError("leaf-death recovery changed the sampled "
+                             "tokens — replay determinism is broken")
+    slack = 8 * chaos.requests_retried + 8   # backoff + admission refill
+    if chaos.steps > cont.steps + chaos.tokens_reprefilled + slack:
+        raise AssertionError(
+            f"recovery overhead blew past the replayed work: "
+            f"{chaos.steps} steps vs clean {cont.steps} + "
+            f"{chaos.tokens_reprefilled} re-prefilled + {slack} slack")
+    rows.append(_row(f"chaos_death_x{slots}", chaos))
+    rows[3].update(
+        requests_retried=chaos.requests_retried,
+        tokens_reprefilled=chaos.tokens_reprefilled,
+        recovery_sec=round(sum(r["recovery_s"]
+                               for r in chaos.recoveries), 4),
+        step_overhead=chaos.steps - cont.steps)
     return rows
 
 

@@ -38,6 +38,41 @@ if [[ "${BENCH_SMOKE:-0}" == "1" ]]; then
   python -m repro.launch.serve --arch qwen2-1.5b --smoke --stream \
     --num-requests 8 --prompt-len 8 --gen-len 8 --slots 4 --page-size 4 \
     --replace-every 8 --place-devices 4 --seed 0
+  echo "== chaos serving smoke (leaf death mid-stream) =="
+  # same stream, one injected device death: every request must still
+  # complete and survivor tokens must be bit-identical to the clean run
+  # (DESIGN.md §Fault-tolerance replay determinism)
+  python -m repro.launch.serve --arch qwen2-1.5b --smoke --stream \
+    --num-requests 8 --prompt-len 8 --gen-len 8 --slots 4 --page-size 4 \
+    --replace-every 8 --place-devices 4 --seed 0 \
+    --trace serve_trace_clean.json
+  python -m repro.launch.serve --arch qwen2-1.5b --smoke --stream \
+    --num-requests 8 --prompt-len 8 --gen-len 8 --slots 4 --page-size 4 \
+    --replace-every 8 --place-devices 4 --seed 0 \
+    --fault-plan "6:leaf_death:1" --trace serve_trace_chaos.json
+  python - <<'PYEOF'
+import json
+clean = json.load(open("serve_trace_clean.json"))
+chaos = json.load(open("serve_trace_chaos.json"))
+assert not chaos["failed"], f"chaos run failed requests: {chaos['failed']}"
+assert len(chaos["requests"]) == len(clean["requests"])
+cg = {r["rid"]: r["generated"] for r in clean["requests"]}
+for r in chaos["requests"]:
+    assert r["generated"] == cg[r["rid"]], \
+        f"rid {r['rid']}: tokens diverged after injected leaf death"
+assert chaos["recoveries"], "fault plan injected but no recovery recorded"
+print(f"[CI] chaos serving OK: {len(chaos['requests'])} requests "
+      f"bit-identical to clean, "
+      f"{chaos['requests_retried']} retried, "
+      f"{chaos['tokens_reprefilled']} tokens re-prefilled")
+PYEOF
+  echo "== chaos training smoke (supervised restart + ckpt restore) =="
+  ckpt_dir="$(mktemp -d)"
+  python -m repro.launch.train --arch qwen2-1.5b --smoke --steps 12 \
+    --batch 2 --seq 16 --ckpt-dir "$ckpt_dir" --ckpt-every 4 \
+    --fault-plan "7:leaf_death:1" | tee /dev/stderr | \
+    grep -q "attempts=2" || { echo "supervised restart did not run"; exit 1; }
+  rm -rf "$ckpt_dir"
   echo "== benchmark smoke tier (REPRO_BENCH_TINY=1) =="
   for b in benchmarks/bench_*.py; do
     mod="benchmarks.$(basename "$b" .py)"

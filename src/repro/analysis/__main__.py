@@ -1,15 +1,18 @@
 """``python -m repro.analysis`` — the static-analysis CLI and CI gate.
 
 Runs the kernel verifier over every registered Pallas kernel plan, the
-sharding lint over the lm/gnn/recsys profile representatives, and the
-serving lint (a synthetic request stream through the real scheduler,
-checking the page-traffic matrix fed to the page mapper); prints the
-findings, optionally writes them as structured JSON (the CI artifact), and
-exits nonzero when any finding reaches ``--severity`` (default ``error``).
+sharding lint over the lm/gnn/recsys profile representatives, the serving
+lint (a synthetic request stream through the real scheduler, checking the
+page-traffic matrix fed to the page mapper), and the fault-tolerance lint
+(every preset degraded by a leaf death, plus a seeded chaos stream whose
+survivors must match the clean run bit-for-bit); prints the findings,
+optionally writes them as structured JSON (the CI artifact), and exits
+nonzero when any finding reaches ``--severity`` (default ``error``).
 
     PYTHONPATH=src python -m repro.analysis                  # full suite
     PYTHONPATH=src python -m repro.analysis --suite kernels
     PYTHONPATH=src python -m repro.analysis --suite serving
+    PYTHONPATH=src python -m repro.analysis --suite faults
     PYTHONPATH=src python -m repro.analysis --severity error \
         --json analysis_findings.json                        # the CI gate
     PYTHONPATH=src python -m repro.analysis --arch qwen2-72b --no-trace
@@ -82,6 +85,78 @@ def run_serving_suite() -> List[Finding]:
     return findings
 
 
+def run_faults_suite() -> List[Finding]:
+    """Fault-tolerance lint (DESIGN.md §Fault-tolerance), host-side only:
+
+    1. every machine preset is degraded by one leaf death and the
+       resulting topology checked — partitioner bin count equals
+       ``n_alive``, every surviving capacity strictly positive, cache
+       token changed (stale placements cannot be served);
+    2. a seeded chaos stream (real scheduler + cache, injected death)
+       must complete every request bit-identical to the clean run, leak
+       no pages (free + dead covers the drained pool) and hand the page
+       mapper a lawful traffic matrix.
+    """
+    import numpy as np
+
+    from repro.analysis import shard_lint
+    from repro.core import machine as machine_lib
+    from repro.resilience import FaultEvent, FaultPlan, run_chaos
+    findings: List[Finding] = []
+    for name in machine_lib.MachineSpec.presets():
+        spec = machine_lib.resolve(name)
+        if spec.kind == "torus2d" or spec.n_devices < 2:
+            continue
+        deg = spec.degrade([FaultEvent(0, "leaf_death", 0)])
+        topo = deg.topology()
+        subject = f"faults:degrade:{name}"
+        if len(topo.compute_bins) != deg.n_alive:
+            findings.append(Finding(
+                "fault-degrade", "error", subject,
+                f"degraded topology exposes {len(topo.compute_bins)} "
+                f"bins, expected n_alive={deg.n_alive}"))
+        speed = topo.bin_speed
+        if speed is not None and not (np.asarray(speed) > 0).all():
+            findings.append(Finding(
+                "fault-degrade", "error", subject,
+                "degraded topology carries a non-positive bin speed — "
+                "a dead leaf leaked into the partitioner"))
+        if deg.cache_token() == spec.cache_token():
+            findings.append(Finding(
+                "fault-degrade", "error", subject,
+                "degrade() left cache_token unchanged — placement "
+                "caches would serve the dead machine's placements"))
+    plan = FaultPlan((FaultEvent(4, "leaf_death", 1),))
+    clean = run_chaos(6, seed=0, n_pages=24, plan=None)
+    chaos = run_chaos(6, seed=0, n_pages=24, plan=plan)
+    for rid, toks in chaos.completed.items():
+        if toks != clean.completed.get(rid):
+            findings.append(Finding(
+                "fault-determinism", "error", f"faults:chaos:rid{rid}",
+                "survivor tokens diverged from the clean run after an "
+                "injected leaf death (replay determinism broken)"))
+    if chaos.failed:
+        findings.append(Finding(
+            "fault-recovery", "error", "faults:chaos",
+            f"{len(chaos.failed)} feasible request(s) failed under a "
+            "single leaf death with retries available"))
+    from repro.resilience import ChaosHarness
+    h = ChaosHarness(n_pages=24, plan=plan)
+    rng = np.random.default_rng(0)
+    for rid in range(6):
+        h.submit(rid, int(rng.integers(2, 9)), int(rng.integers(1, 9)))
+    h.run()
+    alloc = h.scheduler.cache.allocator
+    if alloc.n_free + alloc.n_dead != alloc.n_pages:
+        findings.append(Finding(
+            "serving-leak", "error", "faults:drain",
+            f"{alloc.n_pages - alloc.n_free - alloc.n_dead} page(s) "
+            "still owned after the chaos stream drained"))
+    findings.extend(shard_lint.lint_traffic(
+        h.scheduler.cache.page_traffic(), subject="faults:page-traffic"))
+    return findings
+
+
 def run_sharding_suite(archs, *, trace: bool = True) -> List[Finding]:
     from repro import configs
     from repro.analysis import shard_lint
@@ -100,7 +175,8 @@ def main(argv=None) -> int:
         prog="python -m repro.analysis",
         description="static kernel/sharding verifier (no execution)")
     ap.add_argument("--suite",
-                    choices=("all", "kernels", "sharding", "serving"),
+                    choices=("all", "kernels", "sharding", "serving",
+                             "faults"),
                     default="all")
     ap.add_argument("--severity", choices=analysis.SEVERITIES,
                     default="error",
@@ -125,6 +201,8 @@ def main(argv=None) -> int:
                                            trace=not args.no_trace))
     if args.suite in ("all", "serving"):
         findings.extend(run_serving_suite())
+    if args.suite in ("all", "faults"):
+        findings.extend(run_faults_suite())
 
     shown = (analysis.at_least(findings, args.severity) if args.quiet
              else findings)

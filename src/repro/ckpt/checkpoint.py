@@ -76,11 +76,19 @@ class AsyncSaver:
             self._thread = None
 
 
-def latest_step(root: str) -> Optional[int]:
+def latest_step(root: str, gc_tmp: bool = False) -> Optional[int]:
+    """Newest COMPLETE checkpoint step, or None. ``.tmp_<step>`` dirs —
+    a crash mid-``save_async`` leaves one behind — are never counted;
+    with ``gc_tmp`` they are also swept, which is safe exactly when no
+    save is in flight (the restore path at loop startup)."""
     if not os.path.isdir(root):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(root)
-             if d.startswith("step_")]
+    steps = []
+    for d in os.listdir(root):
+        if d.startswith("step_"):
+            steps.append(int(d.split("_")[1]))
+        elif gc_tmp and d.startswith(".tmp_"):
+            shutil.rmtree(os.path.join(root, d), ignore_errors=True)
     return max(steps) if steps else None
 
 

@@ -69,6 +69,12 @@ def initial_partition(g: Graph, topo: TreeTopology, seed: int = 0) -> np.ndarray
     part = np.zeros(g.n_nodes, dtype=np.int32)
     root = int(np.nonzero(topo.parent < 0)[0][0])
     speed = topo.bin_speed
+    if speed is not None and not (np.asarray(speed) > 0).all():
+        # degraded machines must mask dead leaves out of compute_bins
+        # (MachineSpec.degrade / topology.mask_bins), never zero a speed:
+        # a zero-capacity bin would absorb vertices it can never execute
+        raise ValueError("zero-capacity bin reached the partitioner — "
+                         "mask dead leaves instead of zeroing bin_speed")
 
     def cap_of(bins: np.ndarray) -> float:
         return float(bins.size if speed is None else speed[bins].sum())

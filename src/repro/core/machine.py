@@ -39,7 +39,8 @@ from typing import Dict, Optional, Tuple, Union
 import numpy as np
 
 from repro.core.topology import (Topology, TreeTopology, balanced_tree,
-                                 fat_tree_topology, torus2d_topology)
+                                 fat_tree_topology, mask_bins,
+                                 torus2d_topology)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +71,16 @@ class MachineSpec:
     machine) or one per leaf, leaf order = tree leaf order = row-major
     logical mesh order. ``link_gbps`` is the leaf-level link bandwidth the
     roofline's collective term divides by.
+
+    ``dead_leaves`` / ``link_degrade`` describe a *degraded* machine —
+    normally produced by :meth:`degrade` from injected fault events, never
+    written in a preset. Dead leaves are masked out of the scored topology
+    (they become routers; ``k`` shrinks to the survivors, so zero capacity
+    never reaches the partitioner), and degraded levels are repriced into
+    the per-link cost factors (``F_l`` of a level at ``factor``× bandwidth
+    grows by ``1/factor``). Both fields are part of ``cache_token()``, so
+    a PlacementSession can never serve a healthy machine's cached
+    placement for a degraded one.
     """
 
     name: str
@@ -84,6 +95,8 @@ class MachineSpec:
     leaf_tflops: Union[float, Tuple[float, ...]] = 197.0
     leaf_hbm_gbps: Union[float, Tuple[float, ...]] = 819.0
     link_gbps: float = 50.0
+    dead_leaves: Tuple[int, ...] = ()
+    link_degrade: Tuple[Tuple[str, float], ...] = ()
 
     def __post_init__(self):
         # canonicalize per-leaf capacities: any sequence (list, ndarray)
@@ -131,12 +144,49 @@ class MachineSpec:
             if isinstance(v, tuple) and len(v) != d:
                 raise ValueError(f"{self.name}: {field} has {len(v)} "
                                  f"entries, mesh has {d} devices")
+        # degradation state: canonical (sorted, unique), validated
+        dead = tuple(sorted({int(x) for x in self.dead_leaves}))
+        object.__setattr__(self, "dead_leaves", dead)
+        if dead and (dead[0] < 0 or dead[-1] >= d):
+            raise ValueError(f"{self.name}: dead leaves {dead} out of "
+                             f"range for {d} devices")
+        if len(dead) >= d:
+            raise ValueError(f"{self.name}: all {d} leaves dead — no "
+                             "survivors to place onto")
+        deg = tuple(sorted((str(n), float(f)) for n, f in self.link_degrade))
+        object.__setattr__(self, "link_degrade", deg)
+        if deg:
+            if self.kind != "tree":
+                raise ValueError(f"{self.name}: link_degrade names tree "
+                                 f"levels; {self.kind!r} machines have none")
+            names = {l.name for l in self.levels}
+            for n, f in deg:
+                if n not in names:
+                    raise ValueError(f"{self.name}: link_degrade level "
+                                     f"{n!r} not in {sorted(names)}")
+                if not (0.0 < f <= 1.0):
+                    raise ValueError(f"{self.name}: link_degrade factor "
+                                     f"for {n!r} must be in (0, 1], got {f}")
+        if dead and self.kind == "torus2d":
+            raise ValueError(f"{self.name}: torus machines cannot mask "
+                             "dead leaves (RoutingTopology has no routers)")
 
     # -- sizes -------------------------------------------------------------
 
     @property
     def n_devices(self) -> int:
         return int(np.prod(self.mesh_shape))
+
+    @property
+    def n_alive(self) -> int:
+        """Surviving leaves — the bin count the partitioner sees."""
+        return self.n_devices - len(self.dead_leaves)
+
+    def alive_leaves(self) -> np.ndarray:
+        """[n_alive] original leaf indices of the survivors, ascending.
+        Position in this array == bin index on the degraded topology."""
+        return np.setdiff1d(np.arange(self.n_devices),
+                            np.asarray(self.dead_leaves, dtype=np.int64))
 
     def mesh_spec(self) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
         """(shape, axis names) of the logical mesh this machine backs."""
@@ -190,10 +240,16 @@ class MachineSpec:
 
     def topology(self, F: float = 1.0) -> Topology:
         """The scored machine graph. Leaves in natural order back the
-        row-major logical mesh devices."""
+        row-major logical mesh devices. On a degraded spec, dead leaves
+        are masked out (bin index = rank among survivors, k = n_alive)
+        and degraded levels carry ``1/factor``× their nominal per-byte
+        cost — the reference bandwidth stays the *nominal* leaf link, so
+        degrading a level never cheapens another."""
         if self.kind == "tree":
+            deg = dict(self.link_degrade)
             leaf_gbps = self.levels[-1].gbps
-            cost = tuple(F * leaf_gbps / l.gbps for l in self.levels)
+            cost = tuple(F * leaf_gbps / (l.gbps * deg.get(l.name, 1.0))
+                         for l in self.levels)
             topo = balanced_tree(tuple(l.fanout for l in self.levels),
                                  F=F, level_cost=cost)
         elif self.kind == "fat-tree":
@@ -206,6 +262,8 @@ class MachineSpec:
         speed = self.bin_speed
         if speed is not None:
             topo = dataclasses.replace(topo, bin_speed=speed)
+        if self.dead_leaves:
+            topo = mask_bins(topo, self.dead_leaves)
         return topo
 
     def tree(self, F: float = 1.0) -> TreeTopology:
@@ -214,6 +272,69 @@ class MachineSpec:
             raise TypeError(f"machine {self.name!r} ({self.kind}) is not a "
                             "tree topology")
         return topo
+
+    # -- degradation -------------------------------------------------------
+
+    def degrade(self, events) -> "MachineSpec":
+        """A new spec with the fault ``events`` applied (cumulative with
+        any existing degradation). Events are anything with ``.kind`` /
+        ``.target`` / ``.factor`` (``resilience.faults.FaultEvent``) or
+        equivalent dicts:
+
+        * ``leaf_death``   — adds ``target`` to ``dead_leaves``
+          (idempotent); killing the last survivor raises;
+        * ``link_degrade`` — multiplies the named level's bandwidth
+          factor (two 0.5 degrades leave it at 0.25);
+        * ``straggler``    — scales leaf ``target``'s ``leaf_tflops``,
+          which flows into ``bin_speed`` / capacity-normalized loads
+          (tree machines only — the torus carries no bin_speed).
+
+        The result's ``cache_token()`` differs from the healthy spec's,
+        so placement caches never serve stale placements.
+        """
+        dead = set(self.dead_leaves)
+        link = dict(self.link_degrade)
+        tflops = list(self.leaf_tflops) if isinstance(self.leaf_tflops,
+                                                      tuple) \
+            else [float(self.leaf_tflops)] * self.n_devices
+        slowed = False
+        for ev in events:
+            if isinstance(ev, dict):
+                kind, target = ev["kind"], ev["target"]
+                factor = float(ev.get("factor", 1.0))
+            else:
+                kind, target, factor = ev.kind, ev.target, ev.factor
+            if kind == "leaf_death":
+                t = int(target)
+                if not (0 <= t < self.n_devices):
+                    raise ValueError(f"{self.name}: dead leaf {t} out of "
+                                     f"range for {self.n_devices} devices")
+                dead.add(t)
+            elif kind == "link_degrade":
+                link[str(target)] = link.get(str(target), 1.0) * factor
+            elif kind == "straggler":
+                t = int(target)
+                if not (0 <= t < self.n_devices):
+                    raise ValueError(f"{self.name}: straggler leaf {t} out "
+                                     f"of range for {self.n_devices} "
+                                     "devices")
+                if not (0.0 < factor <= 1.0):
+                    raise ValueError(f"{self.name}: straggler factor must "
+                                     f"be in (0, 1], got {factor}")
+                tflops[t] *= factor
+                slowed = True
+            else:
+                raise ValueError(f"unknown fault kind {kind!r}")
+        if len(dead) >= self.n_devices:
+            raise ValueError(f"{self.name}: fault plan kills all "
+                             f"{self.n_devices} leaves — nothing left to "
+                             "place onto")
+        new_tflops = tuple(tflops) if (slowed or isinstance(
+            self.leaf_tflops, tuple)) else self.leaf_tflops
+        return dataclasses.replace(
+            self, dead_leaves=tuple(sorted(dead)),
+            link_degrade=tuple(sorted(link.items())),
+            leaf_tflops=new_tflops)
 
     # -- identity ----------------------------------------------------------
 

@@ -170,6 +170,32 @@ def with_bin_speed(topo: TreeTopology, speed: Sequence[float]) -> TreeTopology:
     return dataclasses.replace(topo, bin_speed=s / s.max())
 
 
+def mask_bins(topo: TreeTopology, dead_bins: Sequence[int]) -> TreeTopology:
+    """Remove compute bins (dead leaves) from a tree: the dead nodes become
+    routers — zero-capacity bins never reach the partitioner — and the
+    derived structures (``compute_bins``, ``subtree``, ``F_l``) are rebuilt
+    so ``k`` shrinks to the survivor count. ``dead_bins`` is in *bin index*
+    space (0..k-1). ``bin_speed`` is subset to survivors and renormalized
+    (fastest survivor = 1.0), keeping ``comp(b)/speed(b)`` in the uniform
+    objective's units on the degraded machine."""
+    dead = np.unique(np.asarray(list(dead_bins), dtype=np.int64))
+    if dead.size == 0:
+        return topo
+    if dead.size and (dead.min() < 0 or dead.max() >= topo.k):
+        raise ValueError(f"dead bins {dead.tolist()} out of range for a "
+                         f"{topo.k}-bin tree")
+    if dead.size >= topo.k:
+        raise ValueError("cannot mask every compute bin: no survivors")
+    is_router = topo.is_router.copy()
+    is_router[topo.compute_bins[dead]] = True
+    masked = make_tree(topo.parent, is_router=is_router,
+                       link_cost=topo.link_cost)
+    if topo.bin_speed is not None:
+        alive = np.setdiff1d(np.arange(topo.k), dead)
+        masked = with_bin_speed(masked, topo.bin_speed[alive])
+    return masked
+
+
 def flat_topology(k: int, F: float = 1.0) -> TreeTopology:
     """Star: one router root, k compute leaves. Equivalent to classic k-way
     partitioning where comm(l) is the communication volume of bin l."""

@@ -777,6 +777,10 @@ class PlacementSession:
             if not n_devices or n_devices < 1:
                 raise ValueError("map_pages needs a machine or n_devices")
             topo = guess_tree(int(n_devices))
+        if topo.bin_speed is not None and not (topo.bin_speed > 0).all():
+            raise ValueError("zero-capacity bin reached the page mapper — "
+                             "degrade() masks dead leaves; never zero a "
+                             "bin_speed entry")
         k = topo.k
         nw = (np.asarray(node_weight, dtype=np.float64)
               if node_weight is not None else traffic.sum(axis=1))

@@ -5,7 +5,8 @@ legacy one-shot batched decode.
     # engine with the placement-aware paged KV cache
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --stream --num-requests 16 --seed 0 [--trace serve_trace.json] \
-        [--replace-every 16 --place-devices 4] [--machine tpu-mixed-32]
+        [--replace-every 16 --place-devices 4] [--machine tpu-mixed-32] \
+        [--fault-plan "6:leaf_death:1"]
 
     # one-shot: the historical fixed-batch decode path
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
@@ -87,6 +88,13 @@ def _parser() -> argparse.ArgumentParser:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write the ServeReport JSON (per-request "
                          "lifecycle + placement epochs)")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="inject faults into the stream loop: a JSON "
+                         "file ({\"events\": [...]}) or inline "
+                         "'step:kind:target[:factor]' items, comma-"
+                         "separated — e.g. '6:leaf_death:1'. Survivor "
+                         "outputs stay bit-identical to a clean run "
+                         "(DESIGN.md §Fault-tolerance)")
     return ap
 
 
@@ -136,8 +144,13 @@ def serve_stream(args) -> None:
         replace_every=args.replace_every,
         drift_threshold=args.drift_threshold,
         place_devices=args.place_devices, machine=args.machine)
+    injector = None
+    if args.fault_plan:
+        from repro.resilience.faults import FaultInjector, parse_fault_plan
+        injector = FaultInjector(parse_fault_plan(args.fault_plan))
     with mesh:
-        engine = ServingEngine(params, cfg, rules, ecfg, session=session)
+        engine = ServingEngine(params, cfg, rules, ecfg, session=session,
+                               injector=injector)
         for p, g in zip(prompts, gens):
             engine.submit(p, g)
         report = engine.run()
@@ -147,6 +160,12 @@ def serve_stream(args) -> None:
               f"devices={ev['n_devices']} makespan={ev['makespan']:.3e} "
               f"drift={ev['drift_ratio']} replaced={ev['replaced']} "
               f"moved={ev['pages_moved']}", flush=True)
+    for rec in report.recoveries:
+        print(f"[SERVE]   recovery step={rec['step']} "
+              f"device={rec['device']} pages_lost={rec['pages_lost']} "
+              f"requeued={rec['requests_requeued']} "
+              f"failed={rec['requests_failed']} n_alive={rec['n_alive']}",
+              flush=True)
     if args.trace:
         with open(args.trace, "w") as f:
             f.write(report.to_json())

@@ -21,6 +21,11 @@ the final mesh is built with. With one local device this is a no-op.
 trip (``--grad-compress-block N`` switches to one scale per N-element
 block); the residual state is owned by the train loop (threaded per step,
 checkpointed, restored on resume).
+
+``--fault-plan "7:leaf_death:1"`` (with ``--ckpt-dir``) injects a device
+failure and runs under ``loop.run_supervised``: the machine model is
+degraded, the newest checkpoint is restored onto the survivors, and the
+stitched loss trajectory stays continuous (DESIGN.md §Fault-tolerance).
 """
 from __future__ import annotations
 
@@ -110,6 +115,18 @@ def main() -> None:
                          "builds the preset's mesh — the local device "
                          "count must cover it — and scores the mapping "
                          "search against its topology")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="inject device failures: a JSON file or inline "
+                         "'step:kind:target[:factor]' items, e.g. "
+                         "'7:leaf_death:1'. Runs under the restart "
+                         "supervisor: on a death the machine is degraded, "
+                         "the newest checkpoint restored onto the "
+                         "survivors, and training resumes (DESIGN.md "
+                         "§Fault-tolerance). Requires --ckpt-dir for "
+                         "loss-trajectory continuity")
+    ap.add_argument("--max-restarts", type=int, default=4,
+                    help="supervisor restart budget before the injected "
+                         "failure propagates")
     args = ap.parse_args()
     grad_compress = args.grad_compress_block or args.grad_compress
 
@@ -171,6 +188,26 @@ def main() -> None:
                            ckpt_every=args.ckpt_every,
                            ckpt_dir=args.ckpt_dir,
                            grad_compress=grad_compress)
+    if args.fault_plan:
+        from repro.resilience.faults import parse_fault_plan
+        plan = parse_fault_plan(args.fault_plan)
+        # mesh_fn keeps the launcher-built mesh: the injected death is
+        # logical (the machine model shrinks; local devices don't), so
+        # the resumed attempt re-enters the same mesh while placement
+        # decisions see only the survivors
+        params, opt, sup = loop.run_supervised(
+            step, params, opt, batches, lcfg, plan, machine=machine,
+            mesh_fn=lambda n_alive: mesh,
+            max_restarts=args.max_restarts)
+        for rec in sup.recoveries:
+            print(f"[TRAIN] recovery: device {rec['device']} died at "
+                  f"step {rec['step']}; resumed from checkpoint "
+                  f"{rec['resumed_from']} on {rec['n_alive']} leaves",
+                  flush=True)
+        print(f"steps={sup.steps_run} attempts={sup.attempts} "
+              f"recoveries={len(sup.recoveries)} "
+              f"loss {sup.losses[0]:.4f} -> {sup.losses[-1]:.4f}")
+        return
     params, opt, result = loop.run(step, params, opt, batches, lcfg,
                                    mesh=mesh)
     print(f"steps={result.steps_run} resumed_from={result.resumed_from} "

@@ -1,0 +1,31 @@
+"""Fault tolerance: deterministic fault injection and the recovery paths
+it exercises (DESIGN.md §Fault-tolerance).
+
+The paper's premise is time-critical simulation on heterogeneous
+supercomputers — at that scale devices fail *mid-run*, and failure is the
+extreme, discontinuous case of the traffic drift the placement stack
+already re-optimizes for. This package supplies the missing connective
+tissue:
+
+  * ``faults``  — :class:`FaultPlan` (a seeded, step-indexed schedule of
+                  leaf death, link-bandwidth degradation and straggler
+                  slow-down events) and :class:`FaultInjector`, which
+                  fires the plan deterministically against a running
+                  stream or train loop so chaos tests are reproducible.
+  * ``harness`` — a host-only chaos driver (scheduler + paged cache, no
+                  decode, no JAX) shared by the analysis ``faults`` suite
+                  and the property tests.
+
+The degradation/recovery paths themselves live with their owners:
+``core.machine.MachineSpec.degrade`` (failed leaves masked out of the
+scored topology, links repriced), ``serving.ServingEngine`` (page loss,
+bounded-retry requeue, re-placement over survivors) and
+``train.loop.run_supervised`` (checkpoint restore onto the shrunk mesh).
+"""
+from repro.resilience.faults import (DeviceFailure, FaultEvent,
+                                     FaultInjector, FaultPlan,
+                                     parse_fault_plan)
+from repro.resilience.harness import ChaosHarness, ChaosResult, run_chaos
+
+__all__ = ["ChaosHarness", "ChaosResult", "DeviceFailure", "FaultEvent",
+           "FaultInjector", "FaultPlan", "parse_fault_plan", "run_chaos"]

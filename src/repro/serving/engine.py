@@ -17,6 +17,17 @@ objective over the machine tree) and applies the returned page -> device
 assignment — physically reordering the pool — when the current
 placement's makespan on the NEW traffic exceeds the searched one by more
 than ``drift_threshold`` (DESIGN.md §Serving).
+
+Fault recovery (DESIGN.md §Fault-tolerance): with an ``injector``
+(``resilience.FaultInjector``), every step first fires the due fault
+events. A leaf death drops the KV pages resident on the dead device
+(data gone, pages retired from the pool), requeues the affected requests
+through ``Scheduler.handle_leaf_death`` (bounded retries, exponential
+backoff, FIFO preserved for untouched requests), degrades the machine
+spec, and force-re-places the surviving pages over the shrunk device set
+via ``map_pages``. Because sampling is keyed by ``(rid, pos)``, a
+replayed request's continuation — and every survivor's output — is
+bit-identical to the clean run's (pinned by test and the CI chaos cell).
 """
 from __future__ import annotations
 
@@ -28,6 +39,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.core import machine as machine_lib
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.scheduler import Request, Scheduler
 
@@ -46,6 +58,9 @@ class EngineConfig:
     drift_threshold: float = 0.1   # re-place when old/new makespan > 1+thr
     place_devices: int = 0         # placement bins; 0 = jax.device_count()
     machine: Optional[str] = None  # machine preset for the page topology
+    # -- fault recovery --
+    max_retries: int = 3           # requeues per request before FAILED
+    retry_backoff: int = 2         # backoff steps: base * 2**retries
 
 
 @dataclasses.dataclass
@@ -64,20 +79,37 @@ class ServeReport:
     mean_batch_occupancy: float    # active slots per step / n_slots
     placements: List[Dict[str, Any]]
     requests: List[Dict[str, Any]]
+    # -- fault recovery (empty/zero on a clean run) --
+    requests_retried: int = 0      # requests requeued at least once
+    requests_failed: int = 0       # terminally FAILED requests
+    tokens_reprefilled: int = 0    # tokens re-run because pages died
+    recoveries: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list)      # one record per leaf-death recovery
+    faults: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list)      # every injected event, as fired
+    failed: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list)      # FAILED request records with reasons
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=1)
 
     def summary(self) -> str:
-        return (f"[SERVE] {self.n_requests} requests in {self.steps} "
-                f"steps / {self.wall_s:.2f}s -> {self.tokens_out} tokens "
-                f"({self.tok_per_s:.1f} tok/s) "
-                f"latency p50/p99 = {self.latency_steps_p50:.0f}/"
-                f"{self.latency_steps_p99:.0f} steps, ttft p50/p99 = "
-                f"{self.ttft_steps_p50:.0f}/{self.ttft_steps_p99:.0f}, "
-                f"occupancy {self.mean_batch_occupancy:.2f}, "
-                f"replacements "
-                f"{sum(1 for p in self.placements if p['replaced'])}")
+        s = (f"[SERVE] {self.n_requests} requests in {self.steps} "
+             f"steps / {self.wall_s:.2f}s -> {self.tokens_out} tokens "
+             f"({self.tok_per_s:.1f} tok/s) "
+             f"latency p50/p99 = {self.latency_steps_p50:.0f}/"
+             f"{self.latency_steps_p99:.0f} steps, ttft p50/p99 = "
+             f"{self.ttft_steps_p50:.0f}/{self.ttft_steps_p99:.0f}, "
+             f"occupancy {self.mean_batch_occupancy:.2f}, "
+             f"replacements "
+             f"{sum(1 for p in self.placements if p['replaced'])}")
+        if self.faults:
+            s += (f"\n[SERVE] faults: {len(self.faults)} event(s), "
+                  f"{len(self.recoveries)} recover(ies), "
+                  f"{self.requests_retried} retried, "
+                  f"{self.requests_failed} failed, "
+                  f"{self.tokens_reprefilled} tokens re-prefilled")
+        return s
 
 
 @functools.lru_cache(maxsize=None)
@@ -102,7 +134,7 @@ class ServingEngine:
     placement policy is on)."""
 
     def __init__(self, params, cfg, rules, ecfg: EngineConfig,
-                 session: Optional[Any] = None):
+                 session: Optional[Any] = None, injector: Optional[Any] = None):
         import jax
 
         self.params = params
@@ -114,12 +146,30 @@ class ServingEngine:
                                   cfg=cfg)
         self.scheduler = Scheduler(self.cache)
         self.session = session
+        self.injector = injector
+        # the machine model degrades in place as injected faults fire;
+        # map_pages gets the OBJECT (its cache_token tracks degradation)
+        self.machine_spec = machine_lib.resolve(ecfg.machine)
+        self._n_devices0 = (self.machine_spec.n_devices
+                           if self.machine_spec is not None
+                           else (ecfg.place_devices or jax.device_count()))
+        self._dead_devices: set = set()
         self.page_to_device: Optional[np.ndarray] = None
         self.placements: List[Dict[str, Any]] = []
+        self.recoveries: List[Dict[str, Any]] = []
+        self.fault_log: List[Dict[str, Any]] = []
+        self._tokens_reprefilled = 0
         self._rid = 0
         self._step = 0
         self._occupancy: List[int] = []
         self._base_key = jax.random.PRNGKey(ecfg.seed)
+        if injector is not None and self.page_to_device is None:
+            # a death can fire before the first placement epoch; start
+            # from balanced contiguous blocks so "pages on the dead
+            # device" is well-defined from step 0
+            n_dev = self._n_place_bins()
+            self.page_to_device = ((np.arange(ecfg.n_pages) * n_dev)
+                                   // max(ecfg.n_pages, 1))
 
         self._decode = _jitted_decode(cfg, rules)
 
@@ -154,14 +204,25 @@ class ServingEngine:
     # -- the stream loop -------------------------------------------------
 
     def step(self) -> None:
-        """One engine step: admit, batched decode, sample, advance."""
+        """One engine step: fire due faults, admit, batched decode,
+        sample, advance."""
         import jax.numpy as jnp
         ecfg = self.ecfg
+        if self.injector is not None:
+            for ev in self.injector.fire(self._step):
+                self._handle_fault(ev)
         self.scheduler.admit(self._step,
                              only_when_idle=ecfg.static_batching)
         inputs = self.scheduler.step_inputs()
         if not inputs:
             if self.scheduler.queue:
+                head = self.scheduler.queue[0]
+                if head.not_before > self._step:
+                    # every queued request is waiting out its retry
+                    # backoff: an idle step passes, time advances
+                    self._occupancy.append(0)
+                    self._step += 1
+                    return
                 raise RuntimeError(
                     "no active slot and the queue head cannot be "
                     "admitted — infeasible request escaped submit()")
@@ -199,24 +260,85 @@ class ServingEngine:
             self.step()
         return self._report(time.time() - t0)
 
+    # -- fault recovery --------------------------------------------------
+
+    def _n_place_bins(self) -> int:
+        """Placement bins on the CURRENT machine: survivors only."""
+        if self.machine_spec is not None:
+            return self.machine_spec.n_alive
+        return max(self._n_devices0 - len(self._dead_devices), 1)
+
+    def _handle_fault(self, ev) -> None:
+        self.fault_log.append(dict(ev.to_dict(), fired_step=self._step))
+        if ev.kind == "leaf_death":
+            self._recover_leaf_death(ev)
+        elif self.machine_spec is not None:
+            # link_degrade / straggler reprice the machine the NEXT
+            # map_pages scores against (cache_token changes with it)
+            self.machine_spec = self.machine_spec.degrade([ev])
+
+    def _recover_leaf_death(self, ev) -> None:
+        """The leaf-death recovery path (module docstring): drop pages,
+        requeue/fail requests, shrink the machine, re-place survivors."""
+        t0 = time.time()
+        target = int(ev.target)
+        if target in self._dead_devices or not (
+                0 <= target < self._n_devices0):
+            return                     # already dead / unknown: no pages
+        alive = [d for d in range(self._n_devices0)
+                 if d not in self._dead_devices]
+        surv_idx = alive.index(target)
+        retired = set(self.cache.allocator.dead_pages().tolist())
+        dead_pages = [int(p) for p in
+                      np.nonzero(self.page_to_device == surv_idx)[0]
+                      if p not in retired]
+        res = self.scheduler.handle_leaf_death(
+            dead_pages, self._step, max_retries=self.ecfg.max_retries,
+            backoff_base=self.ecfg.retry_backoff)
+        self._tokens_reprefilled += sum(
+            r.prompt_len + r.replay_gen for r in res["requeued"])
+        self._dead_devices.add(target)
+        if self.machine_spec is not None:
+            self.machine_spec = self.machine_spec.degrade([ev])
+        # shift the live assignment into the new survivor index space
+        # (bins above the dead one slide down; its own pages are retired
+        # and carry no traffic — park them on bin 0)
+        asg = self.page_to_device.copy()
+        asg[asg == surv_idx] = 0
+        asg[asg > surv_idx] -= 1
+        self.page_to_device = asg
+        # force one re-placement of the surviving pages onto the shrunk
+        # machine — a failure IS drift, maximally discontinuous
+        replaced = self._replace(force=True, tag="leaf_death")
+        self.recoveries.append({
+            "step": self._step, "device": target,
+            "pages_lost": len(dead_pages),
+            "requests_requeued": len(res["requeued"]),
+            "requests_failed": len(res["failed"]),
+            "n_alive": self._n_place_bins(),
+            "replaced": replaced,
+            "recovery_s": round(time.time() - t0, 4)})
+
     # -- placement policy ------------------------------------------------
 
     def _maybe_replace(self) -> None:
+        self._replace(force=False, tag="epoch")
+
+    def _replace(self, *, force: bool, tag: str) -> bool:
         traffic = self.cache.page_traffic()
         if traffic.sum() <= 0:
-            return
+            return False
         if self.session is None:
             from repro.launch.placement import PlacementSession
             # in-memory only: page placement never touches the compile
             # cache tier
             self.session = PlacementSession(cache_dir="")
-        import jax
-        n_dev = self.ecfg.place_devices or jax.device_count()
+        n_dev = self._n_place_bins()
         placement = self.session.map_pages(
             traffic, node_weight=self.cache.page_weight(),
-            n_devices=n_dev, machine=self.ecfg.machine,
-            current=self.page_to_device)
-        apply = (self.page_to_device is None
+            n_devices=n_dev, machine=self.machine_spec,
+            current=None if force else self.page_to_device)
+        apply = (force or self.page_to_device is None
                  or placement.drift_ratio
                  > 1.0 + self.ecfg.drift_threshold)
         if apply:
@@ -234,8 +356,10 @@ class ServingEngine:
             "makespan": placement.makespan,
             "drift_ratio": (None if not np.isfinite(placement.drift_ratio)
                             else float(placement.drift_ratio)),
-            "replaced": bool(placement.replaced), "pages_moved": moved})
+            "replaced": bool(placement.replaced), "pages_moved": moved,
+            "tag": tag})
         self.cache.reset_traffic()
+        return bool(apply)
 
     # -- metrics ---------------------------------------------------------
 
@@ -252,6 +376,7 @@ class ServingEngine:
 
         occ = (float(np.mean(self._occupancy)) / self.cache.n_slots
                if self._occupancy else 0.0)
+        failed = self.scheduler.failed
         return ServeReport(
             n_requests=len(done), steps=self._step,
             wall_s=round(wall_s, 4), tokens_out=tokens_out,
@@ -266,4 +391,17 @@ class ServingEngine:
                 "submit_step": r.submit_step, "admit_step": r.admit_step,
                 "first_token_step": r.first_token_step,
                 "done_step": r.done_step, "generated": list(r.generated),
-            } for r in done])
+                "retries": r.retries,
+                "requeue_steps": list(r.requeue_steps),
+            } for r in done],
+            requests_retried=sum(1 for r in done + failed if r.retries),
+            requests_failed=len(failed),
+            tokens_reprefilled=self._tokens_reprefilled,
+            recoveries=list(self.recoveries),
+            faults=list(self.fault_log),
+            failed=[{
+                "rid": r.rid, "prompt_len": r.prompt_len,
+                "max_new_tokens": r.max_new_tokens,
+                "retries": r.retries, "fail_step": r.fail_step,
+                "fail_reason": r.fail_reason,
+            } for r in failed])

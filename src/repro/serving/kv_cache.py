@@ -44,10 +44,23 @@ class PageAllocator:
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._owned = np.zeros(n_pages, dtype=bool)
+        # pages on failed devices: permanently out of the pool (fault
+        # recovery); free + owned + dead partitions the pool
+        self._dead = np.zeros(n_pages, dtype=bool)
 
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def n_dead(self) -> int:
+        return int(self._dead.sum())
+
+    @property
+    def n_usable(self) -> int:
+        """Pool capacity excluding retired pages — the feasibility bound
+        after a degrade (``n_free`` is the instantaneous bound)."""
+        return self.n_pages - self.n_dead
 
     def alloc(self, n: int) -> List[int]:
         if n < 0:
@@ -72,18 +85,42 @@ class PageAllocator:
             self._owned[p] = False
             self._free.append(p)
 
+    def retire(self, pages: Sequence[int]) -> None:
+        """Remove pages from the pool permanently (their device died).
+        Pages must be unowned — the recovery path requeues/evicts the
+        owning requests first — and a page retires at most once."""
+        pages = list(pages)
+        for p in pages:
+            if not (0 <= p < self.n_pages):
+                raise ValueError(f"page {p} outside pool of "
+                                 f"{self.n_pages}")
+            if self._owned[p]:
+                raise ValueError(f"cannot retire owned page {p}: release "
+                                 "its slot first")
+            if self._dead[p]:
+                raise ValueError(f"page {p} already retired")
+        dead = set(pages)
+        self._free = [p for p in self._free if p not in dead]
+        self._dead[list(dead)] = True
+
     def owned_pages(self) -> np.ndarray:
         return np.nonzero(self._owned)[0]
 
+    def dead_pages(self) -> np.ndarray:
+        return np.nonzero(self._dead)[0]
+
     def relabel(self, perm: np.ndarray) -> None:
         """Apply a physical relabeling (old id -> new id) to the free list
-        and ownership map — the allocator-side half of
+        and ownership/dead maps — the allocator-side half of
         :meth:`PagedKVCache.apply_placement`."""
         perm = np.asarray(perm, dtype=np.int64)
         self._free = [int(perm[p]) for p in self._free]
         owned = np.zeros_like(self._owned)
         owned[perm[self._owned]] = True
         self._owned = owned
+        dead = np.zeros_like(self._dead)
+        dead[perm[self._dead]] = True
+        self._dead = dead
 
 
 @dataclasses.dataclass
@@ -151,6 +188,16 @@ class PagedKVCache:
         return (need <= self.max_pages_per_req
                 and need <= self.allocator.n_free)
 
+    def feasible(self, n_tokens: int) -> bool:
+        """Whether a request of this size can EVER be admitted on the
+        current (possibly degraded) pool — the ``can_admit`` bound with
+        ``n_usable`` in place of the instantaneous free count. False means
+        the request must be failed, not queued (it would head-block
+        forever)."""
+        need = self.pages_needed(n_tokens)
+        return (need <= self.max_pages_per_req
+                and need <= self.allocator.n_usable)
+
     def assign_slot(self, slot: int, n_tokens: int) -> List[int]:
         """Reserve every page of an ``n_tokens``-token request up front
         and point ``slot``'s page table at them. Raises
@@ -175,6 +222,26 @@ class PagedKVCache:
         self.allocator.free(pages)
         self.page_table[slot, :] = self.sentinel
         return pages
+
+    # -- fault recovery --------------------------------------------------
+
+    def fail_pages(self, pages: Sequence[int]) -> None:
+        """A device died: its pages leave the pool permanently. Pages
+        must already be unowned (the engine requeues/evicts affected
+        requests first). Pool rows are zeroed — the data is gone, and a
+        stale row must never be decoded against — and the dead pages'
+        measured traffic is cleared so the page mapper only sees live
+        co-access."""
+        pages = [int(p) for p in pages]
+        self.allocator.retire(pages)
+        if pages:
+            idx = np.asarray(pages, dtype=np.int64)
+            self.access_count[idx] = 0.0
+            self.traffic[idx, :] = 0.0
+            self.traffic[:, idx] = 0.0
+            if self.k_pool is not None:
+                self.k_pool = self.k_pool.at[:, idx].set(0)
+                self.v_pool = self.v_pool.at[:, idx].set(0)
 
     # -- measured traffic ------------------------------------------------
 
@@ -244,8 +311,8 @@ class PagedKVCache:
 
     def check_invariants(self) -> None:
         """Cheap structural invariants, raised on violation: live page
-        sets disjoint, tables consistent with ownership, free + owned
-        partitions the pool."""
+        sets disjoint, tables consistent with ownership, free + owned +
+        dead partitions the pool, no live request holds a retired page."""
         seen: Dict[int, int] = {}
         for slot, pages in self.slot_pages.items():
             for p in pages:
@@ -258,5 +325,9 @@ class PagedKVCache:
             raise AssertionError(
                 f"allocator/table ownership mismatch: {sorted(owned)} vs "
                 f"{sorted(seen)}")
-        if self.allocator.n_free + len(owned) != self.n_pages:
-            raise AssertionError("free + owned != pool size")
+        dead = set(self.allocator.dead_pages().tolist())
+        if dead & set(seen):
+            raise AssertionError(
+                f"retired pages still owned: {sorted(dead & set(seen))}")
+        if self.allocator.n_free + len(owned) + len(dead) != self.n_pages:
+            raise AssertionError("free + owned + dead != pool size")

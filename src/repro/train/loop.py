@@ -17,18 +17,29 @@ The loop never BUILDS device meshes: the launcher's placement session
 (``repro.launch.placement``) decides where processes land and hands the
 finished mesh in via ``run(..., mesh=...)`` — the loop only enters its
 context around the stepping.
+
+Device failure (DESIGN.md §Fault-tolerance): ``run`` consults an optional
+``resilience.FaultInjector`` each step; an injected ``leaf_death`` raises
+:class:`~repro.resilience.faults.DeviceFailure` carrying the partial loss
+trajectory. :func:`run_supervised` is the restart supervisor: it degrades
+the machine, rebuilds the mesh over the survivors, restores the newest
+checkpoint through the elastic ``restore_sharded`` path (including the
+int8 residual state) and resumes — stitching per-attempt losses into one
+trajectory that matches an uninterrupted run exactly when the batch
+stream is replayable (``batches_factory(start_step)``).
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional, Union
 
 import jax
 import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
+from repro.resilience.faults import DeviceFailure, FaultInjector, plan_from
 
 
 @dataclasses.dataclass
@@ -40,6 +51,7 @@ class LoopConfig:
     log_every: int = 10
     straggler_factor: float = 3.0
     fail_at_step: Optional[int] = None     # fault-injection (tests)
+    resume: bool = True                    # restore newest ckpt at start
     # int8 error-feedback gradient compression (repro.dist.compress): the
     # step_fn must come from make_train_step(grad_compress=...); the loop
     # owns the residual state — initialized once, threaded through every
@@ -63,12 +75,31 @@ class InjectedFailure(RuntimeError):
     pass
 
 
+def _spec_tree_for(state: Any, state_specs: Any):
+    """``True`` means fully replicated: every leaf gets an empty
+    PartitionSpec (elastic restore onto whatever mesh survives)."""
+    if state_specs is True:
+        from jax.sharding import PartitionSpec as P
+        return jax.tree.map(lambda _: P(), state)
+    return state_specs
+
+
 def run(step_fn: Callable, params: Any, opt_state: Any,
         batches: Iterator[Dict[str, np.ndarray]], cfg: LoopConfig,
-        step_offset: int = 0, mesh: Any = None) -> tuple:
+        step_offset: int = 0, mesh: Any = None,
+        injector: Optional[FaultInjector] = None,
+        state_specs: Any = None) -> tuple:
     """Returns (params, opt_state, LoopResult). ``mesh`` (optional) is the
     placement-session-built mesh the stepping runs under; the loop enters
-    its context but never constructs one itself."""
+    its context but never constructs one itself.
+
+    ``injector`` fires seeded fault events by step index: a ``leaf_death``
+    raises :class:`DeviceFailure` (partial ``losses`` and ``start_step``
+    attached so a supervisor can stitch the trajectory), a ``straggler``
+    is counted into ``straggler_steps``. ``state_specs`` (with ``mesh``)
+    routes the restore through ``ckpt.restore_sharded`` so resumed state
+    is placed on the *current* — possibly shrunken — mesh; ``True`` means
+    fully replicated."""
     saver = ckpt.AsyncSaver()
     cstate = None
     if cfg.grad_compress:
@@ -81,22 +112,28 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
         return ((params, opt_state, cstate) if cfg.grad_compress
                 else (params, opt_state))
 
-    if cfg.ckpt_dir:
-        latest = ckpt.latest_step(cfg.ckpt_dir)
+    def _restore(like, latest):
+        if state_specs is not None and mesh is not None:
+            restored, _ = ckpt.restore_sharded(
+                cfg.ckpt_dir, like, _spec_tree_for(like, state_specs),
+                mesh, latest)
+            return restored
+        restored, _ = ckpt.restore(cfg.ckpt_dir, like, latest)
+        return jax.tree.map(jax.numpy.asarray, restored)
+
+    if cfg.ckpt_dir and cfg.resume:
+        latest = ckpt.latest_step(cfg.ckpt_dir, gc_tmp=True)
         if latest is not None:
             try:
-                restored, _ = ckpt.restore(cfg.ckpt_dir, state_tuple(),
-                                           latest)
+                restored = _restore(state_tuple(), latest)
             except ValueError:
                 if not cfg.grad_compress:
                     raise
                 # checkpoint predates grad_compress (no residual leaves):
                 # restore (params, opt_state) and restart error feedback
                 # from a zero residual
-                restored, _ = ckpt.restore(cfg.ckpt_dir,
-                                           (params, opt_state), latest)
+                restored = _restore((params, opt_state), latest)
                 restored = restored + (cstate,)
-            restored = jax.tree.map(jax.numpy.asarray, restored)
             if cfg.grad_compress:
                 params, opt_state, cstate = restored
             else:
@@ -117,6 +154,15 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
                         and step == cfg.fail_at_step):
                     raise InjectedFailure(
                         f"injected failure at step {step}")
+                if injector is not None:
+                    for ev in injector.fire(step):
+                        if ev.kind == "leaf_death":
+                            err = DeviceFailure(ev)
+                            err.losses = list(losses)
+                            err.start_step = start
+                            raise err
+                        if ev.kind == "straggler":
+                            stragglers += 1
                 batch = next(batches)
                 t0 = time.time()
                 if cfg.grad_compress:
@@ -142,3 +188,114 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
     return params, opt_state, LoopResult(
         losses=losses, steps_run=len(losses), resumed_from=resumed_from,
         straggler_steps=stragglers, seconds=time.time() - t_begin)
+
+
+# -- restart supervisor (DESIGN.md §Fault-tolerance) ----------------------
+
+@dataclasses.dataclass
+class SupervisedResult:
+    """Stitched view over every attempt of a supervised run. ``losses``
+    is continuous across restarts: per-attempt losses are truncated at
+    the checkpoint the next attempt resumed from, so with a replayable
+    batch stream the trajectory equals an uninterrupted run's exactly."""
+    losses: list
+    steps_run: int
+    attempts: int
+    recoveries: List[Dict[str, Any]]
+    machine: Any                        # final (possibly degraded) spec
+    final: LoopResult
+
+
+def _default_mesh(n_alive: int):
+    """1-D data mesh over the first ``n_alive`` local devices — the
+    single-host stand-in for the placement session rebuilding a real
+    mesh over the survivors."""
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = max(1, min(int(n_alive), len(devs)))
+    return Mesh(np.asarray(devs[:n]), ("data",))
+
+
+def run_supervised(step_fn: Callable, params: Any, opt_state: Any,
+                   batches_factory: Union[Callable[[int], Iterator],
+                                          Iterator],
+                   cfg: LoopConfig, plan: Any = None, *,
+                   machine: Any = None,
+                   mesh_fn: Optional[Callable] = None,
+                   state_specs: Any = True,
+                   max_restarts: int = 4,
+                   injector: Optional[FaultInjector] = None) -> tuple:
+    """Drive :func:`run` to completion across injected device failures.
+
+    On each :class:`DeviceFailure` the supervisor (1) degrades the machine
+    spec (dead leaf masked, so the next placement never sees a
+    zero-capacity bin), (2) rebuilds the mesh over the survivors
+    (``mesh_fn(n_alive)``), (3) lets ``run`` restore the newest complete
+    checkpoint through the elastic ``restore_sharded`` path — including
+    the int8 error-feedback residual when ``grad_compress`` is on — and
+    (4) replays the batch stream from that step
+    (``batches_factory(start_step)``). The injector is shared across
+    attempts, so an already-fired death is not replayed after resume.
+
+    ``batches_factory`` is ``start_step -> iterator`` (a bare iterator is
+    accepted for streams that are only consumed forward — continuity then
+    depends on the stream, not the supervisor). Loss stitching: the
+    failed attempt's losses are kept up to the checkpoint the resume
+    lands on; everything after is recomputed by the resumed attempt.
+
+    Returns ``(params, opt_state, SupervisedResult)``.
+    """
+    from repro.core import machine as machine_lib
+    if injector is None:
+        injector = FaultInjector(plan_from(plan))
+    if machine is not None:
+        machine = machine_lib.resolve(machine)
+    n_alive = (machine.n_alive if machine is not None
+               else len(jax.devices()))
+    if mesh_fn is None:
+        mesh_fn = _default_mesh
+    if callable(batches_factory):
+        factory = batches_factory
+    else:
+        stream = batches_factory
+
+        def factory(start_step: int) -> Iterator:
+            return stream
+
+    stitched: List[float] = []
+    recoveries: List[Dict[str, Any]] = []
+    attempts = 0
+    while True:
+        attempts += 1
+        start = 0
+        if cfg.ckpt_dir:
+            start = ckpt.latest_step(cfg.ckpt_dir, gc_tmp=True) or 0
+        mesh = mesh_fn(n_alive)
+        try:
+            params, opt_state, res = run(
+                step_fn, params, opt_state, factory(start), cfg,
+                mesh=mesh, injector=injector, state_specs=state_specs)
+            stitched.extend(res.losses)
+            break
+        except DeviceFailure as exc:
+            if len(recoveries) >= max_restarts:
+                raise
+            latest = 0
+            if cfg.ckpt_dir:
+                latest = ckpt.latest_step(cfg.ckpt_dir, gc_tmp=True) or 0
+            # keep only the losses the resume will NOT recompute
+            keep = max(0, latest - exc.start_step)
+            stitched.extend(exc.losses[:keep])
+            ev = exc.event
+            if machine is not None:
+                machine = machine.degrade([ev])
+                n_alive = machine.n_alive
+            else:
+                n_alive = max(1, n_alive - 1)
+            recoveries.append({
+                "step": int(ev.step), "device": ev.target,
+                "resumed_from": int(latest), "n_alive": int(n_alive),
+                "losses_kept": int(keep)})
+    return params, opt_state, SupervisedResult(
+        losses=stitched, steps_run=len(stitched), attempts=attempts,
+        recoveries=recoveries, machine=machine, final=res)

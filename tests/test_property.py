@@ -269,6 +269,58 @@ def test_scheduler_invariants_under_random_streams(stream):
         assert len(r.generated) == r.max_new_tokens
 
 
+@st.composite
+def chaos_streams(draw):
+    """Random request streams x random fault plans against the chaos
+    harness (the real scheduler + cache; a manual seeded sweep of the
+    same property runs in tests/test_resilience.py so CI covers it when
+    hypothesis is absent)."""
+    n_req = draw(st.integers(1, 8))
+    reqs = [(draw(st.integers(1, 8)), draw(st.integers(1, 6)))
+            for _ in range(n_req)]
+    n_devices = draw(st.integers(2, 4))
+    n_deaths = draw(st.integers(0, n_devices - 1))
+    seed = draw(st.integers(0, 2 ** 16))
+    return reqs, n_devices, n_deaths, seed
+
+
+@given(chaos_streams())
+@settings(max_examples=50, deadline=None)
+def test_scheduler_invariants_under_fault_plans(chaos):
+    """Scheduler invariants survive injected leaf deaths: no double page
+    ownership (checked per step inside the harness), free + dead covers
+    the drained pool, every request terminates DONE or FAILED, survivor
+    token streams are bit-identical to the clean run, and requests whose
+    whole lifecycle precedes the first death keep their exact TTFT."""
+    from repro.resilience import ChaosHarness, FaultPlan
+    reqs, n_devices, n_deaths, seed = chaos
+    plan = (FaultPlan.random(seed, 40, n_devices, n_deaths=n_deaths)
+            if n_deaths else None)
+
+    def drive(p):
+        h = ChaosHarness(n_pages=24, n_devices=n_devices, plan=p)
+        for rid, (pl, gl) in enumerate(reqs):
+            h.submit(rid, pl, gl)
+        return h, h.run()
+
+    h_clean, clean = drive(None)
+    h, chaos_res = drive(plan)
+    assert len(chaos_res.completed) + len(chaos_res.failed) == len(reqs)
+    for rid, toks in chaos_res.completed.items():
+        assert toks == clean.completed[rid]
+    alloc = h.scheduler.cache.allocator
+    assert alloc.n_free + alloc.n_dead == alloc.n_pages  # drained, no leak
+    first_death = min((e.step for e in (plan.events if plan else ())
+                       if e.kind == "leaf_death"), default=None)
+    if first_death is not None:
+        clean_done = {r.rid: r for r in h_clean.scheduler.completed}
+        for r in h.scheduler.completed:
+            if r.retries == 0 and r.done_step < first_death:
+                assert (r.first_token_step
+                        == clean_done[r.rid].first_token_step)
+                assert r.done_step == clean_done[r.rid].done_step
+
+
 @given(st.integers(0, 100))
 @settings(max_examples=20, deadline=None)
 def test_monotone_edge_addition(seed):
