@@ -1,7 +1,16 @@
-"""Partitioner scalability: wall time and quality vs graph size and vs
-bin count k (the production tree is 512 compute bins)."""
+"""Partitioner scalability: wall time and quality vs graph size, vs bin
+count k (the production tree is 512 compute bins), and host-vs-device
+V-cycle front ends end-to-end through partition + mesh mapping.
+
+Writes BENCH_scaling.json (gated against benchmarks/baselines/ by
+scripts/bench_compare.py in the bench smoke tier).
+"""
 from __future__ import annotations
 
+import json
+import os
+
+import numpy as np
 
 from benchmarks.common import emit, timed, tiny
 from repro.core import baselines
@@ -11,8 +20,9 @@ from repro.core.topology import balanced_tree, production_tree
 from repro.graph.generators import grid2d, rmat
 
 
-def run() -> None:
-    # size scaling at k=32
+def scaling_size() -> list:
+    """Size scaling at k=32."""
+    rows = []
     topo = balanced_tree((2, 4, 4), level_cost=(8.0, 1.0, 1.0))
     for n, m in tiny([(10_000, 60_000), (100_000, 600_000),
                       (400_000, 2_400_000)],
@@ -27,20 +37,84 @@ def run() -> None:
              makespan=round(res.makespan, 1),
              vs_random=round(m_rand / res.makespan, 2),
              edges_per_sec=int(m / max(secs, 1e-9)))
+        rows.append({"name": f"rmat_n{n}", "partition_s": round(secs, 4),
+                     "makespan": round(res.makespan, 1),
+                     "vs_random": round(m_rand / res.makespan, 2)})
+    return rows
 
-    # k scaling to the production tree (512 chips)
+
+def scaling_k() -> list:
+    """k scaling to the production tree (512 chips)."""
+    rows = []
     side = tiny(256, 48)
     g = grid2d(side, side)
-    for pods, rows, chips in tiny([(1, 4, 4), (1, 16, 16), (2, 16, 16)],
-                                  [(1, 4, 4), (1, 16, 16)]):
-        topo = production_tree(pods, rows, chips)
+    for pods, rws, chips in tiny([(1, 4, 4), (1, 16, 16), (2, 16, 16)],
+                                 [(1, 4, 4), (1, 16, 16)]):
+        topo = production_tree(pods, rws, chips)
         cfg = PartitionConfig(seed=0,
                               refine=RefineConfig(rounds=tiny(24, 8)))
         res, secs = timed(partition, g, topo, cfg)
-        emit("scaling_k", f"tree_{pods}x{rows}x{chips}", secs,
+        emit("scaling_k", f"tree_{pods}x{rws}x{chips}", secs,
              k=topo.k, makespan=round(res.makespan, 1),
              comp_max=round(res.comp_max, 1),
              comm_max=round(res.comm_max, 1))
+        rows.append({"name": f"tree_{pods}x{rws}x{chips}", "k": topo.k,
+                     "partition_s": round(secs, 4),
+                     "makespan": round(res.makespan, 1)})
+    return rows
+
+
+def vcycle() -> list:
+    """Host vs device V-cycle front end, end-to-end partition + map.
+
+    Partitions onto a k=64 tree, quotients the result into a 64x64
+    traffic matrix, and maps it onto the torus-2d machine through the
+    sparse routing oracle — one row per graph size at 10k/100k/1M edges
+    (the acceptance cell is the 1M-edge row; EXPERIMENTS.md records the
+    measured speedup)."""
+    from repro.core import mapping, objective
+    from repro.core.machine import resolve
+    rows = []
+    mtopo = resolve("torus-2d").topology()
+    ptopo = balanced_tree((8, 8))                  # k=64 = the 8x8 torus
+    for n, m in tiny([(2_000, 10_000), (20_000, 100_000),
+                      (200_000, 1_000_000)],
+                     [(600, 3_000)]):
+        g = rmat(n, m, seed=0)
+        row = {"name": f"rmat_m{m}", "n": n, "m": m}
+        for backend in ("host", "device"):
+            cfg = PartitionConfig(
+                seed=0, backend=backend,
+                refine=RefineConfig(rounds=tiny(16, 8)))
+            res, p_secs = timed(partition, g, ptopo, cfg)
+            import jax.numpy as jnp
+            W = np.array(objective.quotient_matrix(
+                jnp.asarray(res.part, dtype=jnp.int32),
+                jnp.asarray(g.senders), jnp.asarray(g.receivers),
+                jnp.asarray(g.edge_weight), ptopo.k))
+            np.fill_diagonal(W, 0.0)
+            mres, m_secs = timed(mapping.search, (8, 8), mtopo, W,
+                                 n_random=tiny(8, 2), seed=0)
+            emit("scaling_vcycle", f"{backend}_m{m}", p_secs + m_secs,
+                 partition_s=round(p_secs, 4), map_s=round(m_secs, 4),
+                 makespan=round(res.makespan, 1),
+                 bottleneck=round(mres.bottleneck, 4))
+            row[f"{backend}_s"] = round(p_secs + m_secs, 4)
+            row[f"{backend}_makespan"] = round(res.makespan, 1)
+        row["speedup"] = round(row["host_s"] / max(row["device_s"], 1e-9),
+                               2)
+        rows.append(row)
+    return rows
+
+
+def run() -> None:
+    out = {"size": scaling_size(), "k": scaling_k(), "vcycle": vcycle(),
+           "tiny": os.environ.get("REPRO_BENCH_TINY", "") == "1"}
+    with open("BENCH_scaling.json", "w") as f:
+        json.dump(out, f, indent=1)
+    best = max(r["speedup"] for r in out["vcycle"])
+    print(f"wrote BENCH_scaling.json (device V-cycle best speedup "
+          f"{best}x over host, {len(out['size'])} size cells)")
 
 
 if __name__ == "__main__":

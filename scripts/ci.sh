@@ -73,6 +73,35 @@ PYEOF
     --fault-plan "7:leaf_death:1" | tee /dev/stderr | \
     grep -q "attempts=2" || { echo "supervised restart did not run"; exit 1; }
   rm -rf "$ckpt_dir"
+  echo "== device V-cycle smoke (partition backend=device + sparse map) =="
+  # the device front end end-to-end: jitted coarsening + capacity-prefix
+  # initial through partition(), verified against the path-walking
+  # oracle, then mapped onto the torus-2d machine through the sparse
+  # routing oracle (DESIGN.md §Device-V-cycle)
+  python - <<'PYEOF'
+import numpy as np
+from repro.core import mapping, objective
+from repro.core.machine import resolve
+from repro.core.partitioner import PartitionConfig, partition, verify
+from repro.core.topology import balanced_tree
+from repro.graph.generators import rmat
+import jax.numpy as jnp
+
+g = rmat(600, 2400, seed=0)
+topo = balanced_tree((4, 4, 4))                 # k=64 = the 8x8 torus
+res = partition(g, topo, PartitionConfig(seed=0, backend="device"))
+verify(g, topo, res)
+W = np.array(objective.quotient_matrix(
+    jnp.asarray(res.part, dtype=jnp.int32), jnp.asarray(g.senders),
+    jnp.asarray(g.receivers), jnp.asarray(g.edge_weight), topo.k))
+np.fill_diagonal(W, 0.0)
+mtopo = resolve("torus-2d").topology()
+m = mapping.search((8, 8), mtopo, W, n_random=2, seed=0)
+ident = mapping.makespan_of_device_map(W, mtopo, np.arange(mtopo.k))
+assert m.bottleneck <= ident + 1e-6, (m.bottleneck, ident)
+print(f"[CI] device V-cycle OK: makespan={res.makespan:.1f}, "
+      f"mapped bottleneck={m.bottleneck:.2f} (identity {ident:.2f})")
+PYEOF
   echo "== benchmark smoke tier (REPRO_BENCH_TINY=1) =="
   for b in benchmarks/bench_*.py; do
     mod="benchmarks.$(basename "$b" .py)"

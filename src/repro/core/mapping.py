@@ -178,8 +178,68 @@ def _routing_loads_batch(T: np.ndarray, topo: RoutingTopology,
     """[C, L] link loads of a batch of device->bin permutations under a
     routing oracle: ``loads[c, l] = 0.5 Σ_ij T[i,j] R[d2b[i], d2b[j], l]``
     (the permuted quotient pushed through the fractional path incidence).
-    Dense [k, k, L] gathers — small machine models only, chunked to bound
-    the materialized [C, D, D, L] slab."""
+
+    Sparse path: traffic is reduced to its unique nonzero upper-triangle
+    pairs once per call, each candidate gathers only the ``[E, P]`` padded
+    link/fraction tables of its permuted pairs, and the per-link reduction
+    is ONE flat ``segment_sum`` over ``row * (L+1) + link`` ids — nothing
+    of size ``k^2 * L`` is ever materialized, which is what lets torus-2d
+    machines scale past a few hundred devices. Candidates are chunked to
+    bound the ``[C, E, P]`` gather slab. ``_routing_loads_dense`` keeps the
+    historical dense-[k, k, L] einsum as the reference oracle for the
+    equivalence tests."""
+    import jax.numpy as jnp
+    d2b = np.asarray(device_to_bin)
+    if d2b.ndim == 1:
+        d2b = d2b[None]
+    Th = np.asarray(T, dtype=np.float64)
+    iu = np.triu_indices(Th.shape[0], 1)
+    pw = 0.5 * (Th[iu] + Th.T[iu])   # diag excluded: path(i, i) is empty
+    nz = pw > 0
+    n_cand, L = d2b.shape[0], topo.n_links
+    if not nz.any() or L == 0:
+        return np.zeros((n_cand, L), dtype=np.float32)
+    pair_u = jnp.asarray(iu[0][nz].astype(np.int32))
+    pair_v = jnp.asarray(iu[1][nz].astype(np.int32))
+    pair_w = jnp.asarray(pw[nz].astype(np.float32))
+    links = jnp.asarray(topo.path_links)
+    fracs = jnp.asarray(topo.path_frac)
+    batched = _routing_scorer()
+    n_pairs = int(pair_u.shape[0])
+    chunk = max(1, (1 << 24) // max(n_pairs * topo.max_path, 1))
+    out = [np.asarray(batched(pair_w, pair_u, pair_v, links, fracs,
+                              jnp.asarray(d2b[lo:lo + chunk], jnp.int32),
+                              n_links=L))
+           for lo in range(0, n_cand, chunk)]
+    return np.concatenate(out, axis=0)
+
+
+@functools.lru_cache(maxsize=1)
+def _routing_scorer():
+    import jax
+    import jax.numpy as jnp
+
+    @functools.partial(jax.jit, static_argnames=("n_links",))
+    def batched(pair_w, pair_u, pair_v, links, fracs, rows, *, n_links):
+        U = rows[:, pair_u]                      # [C, E] permuted pair bins
+        V = rows[:, pair_v]
+        lk = links[U, V]                         # [C, E, P] link ids (pad=L)
+        fr = fracs[U, V]                         # [C, E, P] fractions (pad=0)
+        contrib = pair_w[None, :, None] * fr
+        c = rows.shape[0]
+        seg = (jnp.arange(c, dtype=jnp.int32)[:, None, None]
+               * (n_links + 1) + lk).reshape(-1)
+        flat = jax.ops.segment_sum(contrib.reshape(-1), seg,
+                                   num_segments=c * (n_links + 1))
+        return flat.reshape(c, n_links + 1)[:, :n_links]
+    return batched
+
+
+def _routing_loads_dense(T: np.ndarray, topo: RoutingTopology,
+                         device_to_bin: np.ndarray) -> np.ndarray:
+    """Reference oracle: the historical dense-[k, k, L] einsum path. Kept
+    for sparse-vs-dense equivalence tests; materializes
+    ``topo.path_incidence``, so small machines only."""
     import jax.numpy as jnp
     d2b = np.asarray(device_to_bin)
     if d2b.ndim == 1:
@@ -187,7 +247,7 @@ def _routing_loads_batch(T: np.ndarray, topo: RoutingTopology,
     d = T.shape[0]
     R = jnp.asarray(topo.path_incidence)
     Tj = jnp.asarray(T, dtype=jnp.float32)
-    batched = _routing_scorer()
+    batched = _dense_routing_scorer()
     chunk = max(1, (1 << 24) // max(d * d * topo.n_links, 1))
     out = [np.asarray(batched(Tj, R,
                               jnp.asarray(d2b[lo:lo + chunk], jnp.int32)))
@@ -196,7 +256,7 @@ def _routing_loads_batch(T: np.ndarray, topo: RoutingTopology,
 
 
 @functools.lru_cache(maxsize=1)
-def _routing_scorer():
+def _dense_routing_scorer():
     import jax
     import jax.numpy as jnp
 
@@ -373,7 +433,7 @@ def score_device_maps(T: np.ndarray, topo: Topology,
     two GEMMs against the subtree indicators — with a single host
     roundtrip, instead of one edge rebuild + ``makespan_tree`` call + sync
     per candidate. Routing topologies (``core.machine`` torus presets)
-    take the dense oracle path instead of the tree-LCA identity.
+    take the sparse path-table oracle instead of the tree-LCA identity.
     """
     import jax.numpy as jnp
     if isinstance(topo, RoutingTopology):
@@ -471,7 +531,7 @@ def search_mesh_mapping(mesh_shape: Sequence[int],
     ``machine`` (a ``core.machine.MachineSpec``) supplies the topology
     declaratively — ``machine.topology()`` — instead of an explicit
     ``topo``; routing machines (torus presets) are scored through the
-    dense oracle path and skip the tree-only recursive pass.
+    sparse path-table oracle and skip the tree-only recursive pass.
     """
     shape = tuple(mesh_shape)
     d = int(np.prod(shape))

@@ -2,10 +2,15 @@
 
 Pipeline (classic V-cycle, bottleneck objective throughout):
 
-  coarsen (host, heavy-edge matching)  ->  initial (hierarchical greedy
-  growing on the coarsest graph)  ->  uncoarsen: project + JAX bottleneck
+  coarsen (heavy-edge matching)  ->  initial (hierarchical greedy growing
+  on the coarsest graph)  ->  uncoarsen: project + JAX bottleneck
   refinement at every level (dense all-bin gains on coarse levels, sampled
   candidates on fine levels).
+
+``PartitionConfig.backend`` selects the V-cycle front end: ``"host"``
+(numpy coarsening + greedy grow — the reference path) or ``"device"``
+(jitted segment-op coarsening + capacity-prefix initial, so the whole
+V-cycle runs on the accelerator; DESIGN.md §Device-V-cycle).
 
 ``partition`` is the single public entry point used by every consumer
 (GNN data placement, MoE expert placement, embedding-shard placement,
@@ -20,8 +25,9 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core import objective, refine as refine_mod
-from repro.core.coarsen import coarsen
-from repro.core.initial import initial_partition, random_partition
+from repro.core.coarsen import coarsen, coarsen_device
+from repro.core.initial import (initial_partition, initial_partition_device,
+                                random_partition)
 from repro.core.reference import makespan_ref
 from repro.core.refine import RefineConfig
 from repro.core.topology import TreeTopology
@@ -37,6 +43,12 @@ class PartitionConfig:
     initial: str = "hierarchical"   # or "random"
     final_rounds: Optional[int] = None  # extra rounds on the finest level
     seeds: int = 1                  # best-of-S vmapped refinement (>= 1)
+    # "host": numpy coarsening + greedy-grow initial (the reference path);
+    # "device": jitted segment-op coarsening (coarsen_device) + the
+    # capacity-prefix initial — the full V-cycle runs on the accelerator
+    # (refinement is device-resident on both). Quality pinned within 1.05x
+    # of host by test.
+    backend: str = "host"
 
 
 @dataclasses.dataclass
@@ -79,10 +91,12 @@ def _initial_parts(coarsest: Graph, topo: TreeTopology,
     growing and balanced random assignments at shifted seeds for
     diversity."""
     parts = []
+    grow = (initial_partition_device if cfg.backend == "device"
+            else initial_partition)
     for i in range(cfg.seeds):
         hier = (cfg.initial == "hierarchical") if i == 0 else (i % 2 == 1)
         if hier:
-            parts.append(initial_partition(coarsest, topo, seed=cfg.seed + i))
+            parts.append(grow(coarsest, topo, seed=cfg.seed + i))
         else:
             parts.append(random_partition(coarsest.n_nodes, topo.k,
                                           coarsest.node_weight,
@@ -95,10 +109,14 @@ def partition(g: Graph, topo: TreeTopology,
     cfg = cfg or PartitionConfig()
     if cfg.seeds < 1:
         raise ValueError(f"seeds must be >= 1, got {cfg.seeds}")
+    if cfg.backend not in ("host", "device"):
+        raise ValueError(f"backend must be 'host' or 'device', "
+                         f"got {cfg.backend!r}")
     t0 = time.time()
-    levels = coarsen(g, topo.k, seed=cfg.seed,
-                     coarse_factor=cfg.coarse_factor,
-                     max_levels=cfg.max_levels)
+    coarsen_fn = coarsen_device if cfg.backend == "device" else coarsen
+    levels = coarsen_fn(g, topo.k, seed=cfg.seed,
+                        coarse_factor=cfg.coarse_factor,
+                        max_levels=cfg.max_levels)
     coarsest = levels[-1].graph
     history: List[float] = []
     # uncoarsen: every level refines all S partitions in ONE vmapped scan

@@ -8,8 +8,10 @@ TPU-native representation: for trees we never materialize per-pair paths.
 Link ``l`` (the edge between node ``c`` and ``parent(c)``) lies on
 ``path(i, j)`` iff exactly one of ``i, j`` is in ``subtree(c)``, so the whole
 objective reduces to GEMMs against the subtree indicator ``S`` (see
-``objective.py``). For non-tree routing oracles we materialize the fractional
-path-incidence tensor ``R[i, j, l]`` (small bin counts only).
+``objective.py``). For non-tree routing oracles we store sparse padded
+per-pair link tables (``RoutingTopology.path_links`` / ``path_frac``); the
+dense fractional incidence tensor ``R[i, j, l]`` is an on-demand derived view
+for small machines only.
 """
 from __future__ import annotations
 
@@ -274,23 +276,67 @@ def guess_tree(n: int, F: float = 1.0) -> TreeTopology:
     return balanced_tree((best, n // best), F=F, level_cost=(F * rel, F))
 
 
+# Dense [k, k, L] materialization guard: path_incidence is a derived view
+# for small-machine reference paths only; past this entry count the sparse
+# tables are the ONLY representation (a 16x16 torus is ~34M entries; a
+# 32x32 torus would be 2.1G — the exact blow-up the sparse oracle removes).
+DENSE_INCIDENCE_MAX = 1 << 28
+
+
 @dataclasses.dataclass(frozen=True)
 class RoutingTopology:
     """Routing-graph generalization: arbitrary interconnect + routing oracle.
 
-    ``path_incidence[i, j, l]`` is the fraction of (i, j) traffic crossing
-    link ``l`` (1.0 for single-path oracles; 1/k per path for k-way multipath).
-    Dense [k, k, L]: intended for small machine models (k <= ~64); the
-    production tree uses :class:`TreeTopology`.
+    Sparse-first representation: the routing oracle is a padded per-link
+    incidence table — ``path_links[i, j, :]`` lists the link ids on
+    ``path(i, j)`` (padded with the sentinel ``n_links``) and
+    ``path_frac[i, j, p]`` the fraction of (i, j) traffic each carries
+    (1.0 for single-path oracles; fractions sum per shared link for
+    multipath). Storage is ``O(k^2 * max_path)`` instead of the dense
+    ``[k, k, L]`` incidence tensor, which for a torus grows as the 6th
+    power of the side — the sparse tables are what lets ``torus-2d``-style
+    machines scale past a few hundred devices (``core.mapping`` scores
+    candidate batches with one flat ``segment_sum`` over these tables).
+
+    ``path_incidence`` is still available as an on-demand dense view for
+    the small-machine reference paths (``reference.makespan_routing_ref``,
+    ``objective.link_loads_routing``); it raises past
+    ``DENSE_INCIDENCE_MAX`` entries rather than silently allocating GBs.
     """
 
     k: int
     n_links: int
-    path_incidence: np.ndarray  # [k, k, L] float32
+    path_links: np.ndarray      # [k, k, P] int32, padded with n_links
+    path_frac: np.ndarray       # [k, k, P] float32, 0 on padding
     F_l: np.ndarray             # [L] float32
 
+    @property
+    def max_path(self) -> int:
+        return int(self.path_links.shape[2])
+
+    @property
+    def path_incidence(self) -> np.ndarray:
+        """Dense ``[k, k, L]`` fractional incidence, materialized on demand
+        (and cached) for small machines; the scoring hot paths never call
+        this — they run on the sparse tables directly."""
+        cached = self.__dict__.get("_dense_incidence")
+        if cached is not None:
+            return cached
+        if self.k * self.k * self.n_links > DENSE_INCIDENCE_MAX:
+            raise MemoryError(
+                f"dense [k, k, L] incidence of {self.k}x{self.k}x"
+                f"{self.n_links} exceeds {DENSE_INCIDENCE_MAX} entries — "
+                "use the sparse path tables (path_links/path_frac)")
+        R = np.zeros((self.k, self.k, self.n_links), dtype=np.float32)
+        i, j, p = np.nonzero(self.path_links < self.n_links)
+        np.add.at(R, (i, j, self.path_links[i, j, p]),
+                  self.path_frac[i, j, p])
+        object.__setattr__(self, "_dense_incidence", R)
+        return R
+
     def distance_matrix(self) -> np.ndarray:
-        return np.einsum("ijl,l->ij", self.path_incidence, self.F_l)
+        f = np.append(self.F_l.astype(np.float64), 0.0)  # sentinel costs 0
+        return (f[self.path_links] * self.path_frac).sum(axis=2)
 
 
 # A machine graph the objective/mapping layers can score: the tree
@@ -301,16 +347,29 @@ Topology = Union[TreeTopology, RoutingTopology]
 def routing_from_paths(k: int, n_links: int,
                        paths: dict, F_l: Optional[np.ndarray] = None) -> RoutingTopology:
     """``paths[(i, j)]`` is a list of paths, each a list of link ids; traffic
-    splits evenly across the listed paths (multipath oracle)."""
-    R = np.zeros((k, k, n_links), dtype=np.float32)
+    splits evenly across the listed paths (multipath oracle). Fractions are
+    aggregated per (pair, link) — a link shared by several of a pair's paths
+    appears once with the summed fraction — then laid out as the padded
+    ``[k, k, P]`` tables (P = longest aggregated link set)."""
+    per_pair: dict = {}
     for (i, j), plist in paths.items():
+        acc = per_pair.setdefault((i, j), {})
         for p in plist:
             for l in p:
-                R[i, j, l] += 1.0 / len(plist)
-                R[j, i, l] += 1.0 / len(plist)
+                acc[l] = acc.get(l, 0.0) + 1.0 / len(plist)
+    max_path = max((len(a) for a in per_pair.values()), default=0)
+    max_path = max(max_path, 1)
+    links = np.full((k, k, max_path), n_links, dtype=np.int32)
+    fracs = np.zeros((k, k, max_path), dtype=np.float32)
+    for (i, j), acc in per_pair.items():
+        ls = np.fromiter(acc.keys(), dtype=np.int32, count=len(acc))
+        fs = np.fromiter(acc.values(), dtype=np.float32, count=len(acc))
+        links[i, j, :ls.size] = links[j, i, :ls.size] = ls
+        fracs[i, j, :fs.size] = fracs[j, i, :fs.size] = fs
     if F_l is None:
         F_l = np.ones(n_links, dtype=np.float32)
-    return RoutingTopology(k=k, n_links=n_links, path_incidence=R,
+    return RoutingTopology(k=k, n_links=n_links, path_links=links,
+                           path_frac=fracs,
                            F_l=np.asarray(F_l, dtype=np.float32))
 
 

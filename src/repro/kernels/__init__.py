@@ -16,6 +16,10 @@ Kernels:
   * ``flash_attention`` — fused online-softmax attention forward — VMEM
     score tiles, GQA via BlockSpec index maps; the LM hot spot whose HBM
     traffic the roofline memory term models.
+  * ``match_keys`` — jittered masked arc keys for device heavy-edge
+    matching (the per-round hot map of ``coarsen.coarsen_device``).
+  * ``bucket_assign`` — capacity-boundary bucket search for the device
+    initial partition (fused searchsorted over VMEM-resident boundaries).
 
 Every kernel builds its ``pallas_call`` arguments through a ``plan(...)``
 function (``plan.py:KernelPlan``) and registers an ``example_plan`` in
@@ -28,8 +32,9 @@ verification; DESIGN.md §Static-analysis).
 from typing import Callable, Dict
 
 from repro.kernels import ops, ref  # noqa: F401
-from repro.kernels import (bag_combine, bsr_spmm, flash_attention,
-                           partition_gain, quotient_link_loads)
+from repro.kernels import (bag_combine, bsr_spmm, bucket_assign,
+                           flash_attention, match_keys, partition_gain,
+                           quotient_link_loads)
 from repro.kernels.plan import KernelPlan  # noqa: F401
 
 # kernel name (= module stem) -> zero-arg plan builder at small
@@ -40,4 +45,6 @@ KERNEL_REGISTRY: Dict[str, Callable[[], KernelPlan]] = {
     "bag_combine": bag_combine.example_plan,
     "partition_gain": partition_gain.example_plan,
     "quotient_link_loads": quotient_link_loads.example_plan,
+    "match_keys": match_keys.example_plan,
+    "bucket_assign": bucket_assign.example_plan,
 }

@@ -1,0 +1,85 @@
+"""Jittered matching-key kernel for device-side heavy-edge coarsening.
+
+One matching round of the device V-cycle (``core.coarsen.coarsen_device``)
+ranks every arc by a jittered edge weight, masked to arcs whose endpoints
+are both still eligible:
+
+    key[a] = w[a] * (1 + 0.01 * u[a])   if mask[a] > 0 else  -1.0
+
+— a pure elementwise map over the arc list, but it sits inside the
+3-rounds-per-level matching loop, so on TPU it runs as a lane-tiled VPU
+kernel over the ``[rows, 128]`` arc layout (arcs are reshaped/padded by the
+``ops.match_keys`` wrapper). The masked keys then feed two ``segment_max``
+passes (per-sender max, then argmax-by-arc-id) that pick each vertex's
+proposal — those stay in XLA where the hardware segment reduction lives.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.plan import KernelPlan
+
+_LANES = 128
+
+
+def _kernel(w_ref, u_ref, mask_ref, out_ref):
+    w = w_ref[...]
+    u = u_ref[...]
+    m = mask_ref[...]
+    key = w * (1.0 + 0.01 * u)
+    out_ref[...] = jnp.where(m > 0, key, -1.0)
+
+
+def plan(m: int, *, row_blk: int = 256) -> KernelPlan:
+    """Static call plan over the ``[rows, 128]`` arc layout: one row tile
+    per grid point, three aligned input blocks, no output revisits."""
+    rows = max((m + _LANES - 1) // _LANES, 1)
+    rows_pad = ((rows + row_blk - 1) // row_blk) * row_blk
+    blk = pl.BlockSpec((row_blk, _LANES), lambda i: (i, 0))
+    aval = jax.ShapeDtypeStruct((rows_pad, _LANES), jnp.float32)
+    return KernelPlan(
+        name="match_keys",
+        grid=(rows_pad // row_blk,),
+        in_specs=(blk, blk, blk),
+        out_specs=(pl.BlockSpec((row_blk, _LANES), lambda i: (i, 0)),),
+        operands=(aval, aval, aval),
+        outputs=(aval,),
+        meta=dict(rows_pad=rows_pad),
+    )
+
+
+def example_plan() -> KernelPlan:
+    return plan(m=100_000)
+
+
+@functools.partial(jax.jit, static_argnames=("row_blk", "interpret"))
+def match_keys_tiled(w: jnp.ndarray, u: jnp.ndarray, mask: jnp.ndarray, *,
+                     row_blk: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Masked jittered keys of a flat arc list. [m]
+
+    ``w``: [m] edge weights; ``u``: [m] uniform jitter in [0, 1);
+    ``mask``: [m] >0 on arcs whose endpoints are both eligible.
+    """
+    m = w.shape[0]
+    p = plan(m, row_blk=row_blk)
+    rows_pad = p.meta["rows_pad"]
+    pad = rows_pad * _LANES - m
+
+    def lay(x):
+        return jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(
+            rows_pad, _LANES)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=p.grid,
+        in_specs=list(p.in_specs),
+        out_specs=p.out_specs[0],
+        out_shape=p.outputs[0],
+        interpret=interpret,
+    )(lay(w), lay(u), lay(mask))
+    return out.reshape(-1)[:m]

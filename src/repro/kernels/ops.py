@@ -22,12 +22,54 @@ import numpy as np
 
 from repro.kernels import bag_combine as _bag
 from repro.kernels import bsr_spmm as _bsr
+from repro.kernels import bucket_assign as _ba
+from repro.kernels import match_keys as _mk
 from repro.kernels import partition_gain as _pg
 from repro.kernels import quotient_link_loads as _qll
 
 
 def use_pallas() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# match_keys: jittered masked arc keys (device coarsening, per match round)
+# ---------------------------------------------------------------------------
+
+def match_keys(w: jnp.ndarray, u: jnp.ndarray, mask: jnp.ndarray,
+               pallas: Optional[bool] = None,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """key[a] = w[a]*(1 + 0.01*u[a]) on arcs with mask>0, else -1. [m]"""
+    if pallas is None:
+        pallas = use_pallas()
+    if pallas or interpret:
+        if interpret is None:
+            interpret = not use_pallas()
+        return _mk.match_keys_tiled(w, u, mask, interpret=interpret)
+    return jnp.where(mask > 0, w * (1.0 + 0.01 * u), -1.0)
+
+
+# ---------------------------------------------------------------------------
+# bucket_assign: capacity-boundary bucket search (device initial partition)
+# ---------------------------------------------------------------------------
+
+def bucket_assign(cum: jnp.ndarray, boundaries: jnp.ndarray, k: int,
+                  pallas: Optional[bool] = None,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """bin[v] = #{i : cum[v] >= boundaries[i]} over the k-1 interior
+    capacity prefix targets. [n] int32 in [0, k-1]."""
+    if pallas is None:
+        pallas = use_pallas()
+    if pallas or interpret:
+        if interpret is None:
+            interpret = not use_pallas()
+        out = _ba.bucket_assign_tiled(cum, boundaries, k=k,
+                                      interpret=interpret)
+    else:
+        out = jnp.searchsorted(boundaries.astype(jnp.float32),
+                               cum.astype(jnp.float32),
+                               side="right").astype(jnp.int32)
+    return jnp.clip(out, 0, k - 1)
 
 
 # ---------------------------------------------------------------------------

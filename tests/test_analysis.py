@@ -89,6 +89,33 @@ def test_mutation_non_trailing_seq_axis_is_flagged():
     assert race
 
 
+def test_mutation_match_keys_colliding_out_map_is_flagged():
+    """Pointing every match_keys grid point at output block (0, 0) turns
+    the race-free row tiling into an undeclared write race."""
+    from repro.kernels import match_keys
+    plan = match_keys.example_plan()
+    mutated = dataclasses.replace(
+        plan, out_specs=(pl.BlockSpec(plan.out_specs[0].block_shape,
+                                      lambda i: (0, 0)),))
+    race = [f for f in errors(akernels.verify_plan(mutated))
+            if f.check == "write-race"]
+    assert race, analysis.format_findings(akernels.verify_plan(mutated))
+
+
+def test_mutation_bucket_assign_partial_boundary_block_is_flagged():
+    """Shrinking bucket_assign's VMEM-resident boundary row to a block
+    that no longer divides the padded boundary operand is an error."""
+    from repro.kernels import bucket_assign
+    plan = bucket_assign.example_plan()
+    k_pad = plan.operands[1].shape[1]
+    mutated = dataclasses.replace(
+        plan, in_specs=(plan.in_specs[0],
+                        pl.BlockSpec((1, k_pad - 1), lambda i: (0, 0))))
+    div = [f for f in errors(akernels.verify_plan(mutated))
+           if f.check == "block-divisibility"]
+    assert div, analysis.format_findings(akernels.verify_plan(mutated))
+
+
 def test_mutation_non_dividing_block_is_flagged():
     plan = KernelPlan(
         name="mutant_nondividing",

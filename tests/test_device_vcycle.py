@@ -1,0 +1,255 @@
+"""Device-resident V-cycle + sparse routing oracle (DESIGN.md
+§Device-V-cycle): sparse-vs-dense oracle equivalence, device-coarsening
+invariants (manual multi-seed sweep — the hypothesis twin lives in
+test_property.py), device-vs-host partition quality pinned within 1.05x,
+and the new kernels' interpret-mode parity with their XLA fallbacks."""
+import numpy as np
+import pytest
+
+from repro.core import mapping
+from repro.core.coarsen import coarsen, coarsen_device
+from repro.core.initial import initial_partition_device
+from repro.core.machine import resolve
+from repro.core.partitioner import PartitionConfig, partition, verify
+from repro.core.topology import balanced_tree, torus2d_topology, with_bin_speed
+from repro.graph.graph import from_edges
+
+
+def _rmat(n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    w = rng.random(m).astype(np.float32) + 0.1
+    nw = rng.random(n).astype(np.float32) + 0.5
+    return from_edges(n, u, v, w, nw)
+
+
+def _random_traffic(d, seed, density=0.3):
+    rng = np.random.default_rng(seed)
+    T = rng.uniform(0, 4, (d, d)) * (rng.uniform(0, 1, (d, d)) > 1 - density)
+    T = np.triu(T, 1)
+    T = T + T.T
+    # normalize to O(1) link loads so atol comparisons are meaningful in
+    # f32 (both scorers are linear in T)
+    return T / max(T.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# sparse routing oracle vs dense reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("multipath", [False, True])
+def test_sparse_oracle_matches_dense_on_torus_preset(multipath):
+    """Identical link loads (atol 1e-5) on the torus-2d preset machine for
+    random traffic matrices and candidate batches."""
+    machine = resolve("torus-2d")
+    topo = machine.topology() if not multipath else torus2d_topology(
+        8, 8, multipath=True)
+    d = topo.k
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        T = _random_traffic(d, seed)
+        cands = np.stack([rng.permutation(d) for _ in range(5)]
+                         + [np.arange(d)])
+        sparse = mapping._routing_loads_batch(T, topo, cands)
+        dense = mapping._routing_loads_dense(T, topo, cands)
+        np.testing.assert_allclose(sparse, dense, atol=1e-5)
+
+
+def test_sparse_oracle_scales_past_dense_chunk_budget():
+    """A 16x16 torus (k=256, L=512) puts the dense [k, k, L] tensor at
+    33.5M entries — past the old dense chunk budget of 1<<24 — and the
+    sparse path must still score it, matching an exact host path-walk."""
+    topo = torus2d_topology(16, 16)
+    d = topo.k
+    assert d * d * topo.n_links > (1 << 24)
+    rng = np.random.default_rng(7)
+    T = np.zeros((d, d))
+    pairs = rng.choice(d * d, size=200, replace=False)
+    iu, iv = pairs // d, pairs % d
+    keep = iu != iv
+    T[iu[keep], iv[keep]] = rng.uniform(1, 5, keep.sum())
+    T = T + T.T
+    T = T / T.sum()
+    cands = np.stack([np.arange(d), rng.permutation(d)])
+    loads = mapping._routing_loads_batch(T, topo, cands)
+    assert loads.shape == (2, topo.n_links)
+    # exact reference: walk the padded path tables per nonzero pair
+    for ci, row in enumerate(cands):
+        ref = np.zeros(topo.n_links)
+        for a, b in zip(*np.nonzero(np.triu(T, 1))):
+            ba, bb = row[a], row[b]
+            for p in range(topo.max_path):
+                li = topo.path_links[ba, bb, p]
+                if li < topo.n_links:
+                    ref[li] += T[a, b] * topo.path_frac[ba, bb, p]
+        np.testing.assert_allclose(loads[ci], ref, atol=1e-4)
+
+
+def test_routing_search_prefers_sparse_scored_candidates():
+    """mapping.search on the torus-2d machine runs end-to-end through the
+    sparse oracle; searched is never worse than identity."""
+    machine = resolve("torus-2d")
+    topo = machine.topology()
+    T = _random_traffic(topo.k, seed=3)
+    res = mapping.search((8, 8), topo, T, n_random=4, seed=0)
+    identity = mapping.makespan_of_device_map(T, topo,
+                                              np.arange(topo.k))
+    assert res.bottleneck <= identity + 1e-6
+
+
+def test_dense_incidence_property_is_cached_and_guarded():
+    topo = torus2d_topology(3, 3)
+    R1 = topo.path_incidence
+    assert R1 is topo.path_incidence          # cached
+    assert R1.shape == (9, 9, topo.n_links)
+    from repro.core import topology as tmod
+    big = tmod.RoutingTopology(
+        k=1 << 10, n_links=1 << 10,
+        path_links=np.zeros((2, 2, 1), np.int32),
+        path_frac=np.zeros((2, 2, 1), np.float32),
+        F_l=np.ones(1, np.float32))
+    with pytest.raises(MemoryError):
+        _ = big.path_incidence
+
+
+# ---------------------------------------------------------------------------
+# device coarsening invariants (manual multi-seed sweep)
+# ---------------------------------------------------------------------------
+
+def _check_coarsen_invariants(levels):
+    for li in range(1, len(levels)):
+        fine, coarse = levels[li - 1], levels[li]
+        fg, cg = fine.graph, coarse.graph
+        # never increases node count
+        assert cg.n_nodes < fg.n_nodes
+        # total node weight preserved at every level
+        np.testing.assert_allclose(cg.node_weight.sum(),
+                                   fg.node_weight.sum(), rtol=1e-5)
+        # fine_to_coarse is a total surjective map
+        f2c = fine.fine_to_coarse
+        assert f2c.shape == (fg.n_nodes,)
+        assert f2c.min() >= 0
+        assert np.unique(f2c).size == cg.n_nodes
+        assert f2c.max() == cg.n_nodes - 1
+        # edge-weight accounting: coarse total = fine total minus the
+        # weight contracted inside clusters (intra-cluster edges vanish)
+        half = fg.senders < fg.receivers
+        intra = fg.edge_weight[half & (f2c[fg.senders]
+                                       == f2c[fg.receivers])].sum()
+        fine_tot = fg.edge_weight[half].sum()
+        coarse_tot = cg.edge_weight[cg.senders < cg.receivers].sum()
+        np.testing.assert_allclose(coarse_tot, fine_tot - intra, rtol=1e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_device_coarsening_invariants_multi_seed(seed):
+    g = _rmat(1500, 6000, seed=seed)
+    levels = coarsen_device(g, k=8, seed=seed)
+    assert len(levels) > 1, "coarsening made no progress"
+    assert levels[0].graph is g
+    _check_coarsen_invariants(levels)
+
+
+def test_device_and_host_coarsening_reach_similar_depth():
+    g = _rmat(2000, 8000, seed=0)
+    lv_h = coarsen(g, k=8, seed=0)
+    lv_d = coarsen_device(g, k=8, seed=0)
+    # same stop criteria -> comparable chains (not bit-identical: the
+    # jitter streams differ)
+    assert abs(len(lv_d) - len(lv_h)) <= 2
+    assert lv_d[-1].graph.n_nodes <= lv_h[0].graph.n_nodes // 2
+
+
+# ---------------------------------------------------------------------------
+# device initial assignment
+# ---------------------------------------------------------------------------
+
+def test_device_initial_is_capacity_proportional():
+    g = _rmat(800, 3000, seed=1)
+    topo = balanced_tree((2, 4))
+    part = initial_partition_device(g, topo)
+    assert part.shape == (g.n_nodes,)
+    assert part.min() >= 0 and part.max() < topo.k
+    loads = np.bincount(part, weights=g.node_weight, minlength=topo.k)
+    target = g.node_weight.sum() / topo.k
+    # prefix split: every bin within one max node weight of its target
+    slack = g.node_weight.max() + 1e-4
+    assert (np.abs(loads - target) <= slack).all()
+
+    speedy = with_bin_speed(topo, [1, 1, 1, 1, 0.25, 0.25, 0.25, 0.25])
+    part2 = initial_partition_device(g, speedy)
+    loads2 = np.bincount(part2, weights=g.node_weight, minlength=topo.k)
+    # slow bins get ~1/4 the weight of fast bins
+    assert loads2[:4].sum() > 2.5 * loads2[4:].sum()
+
+
+def test_device_initial_rejects_zero_capacity_bins():
+    g = _rmat(100, 300)
+    topo = balanced_tree((2, 2))
+    import dataclasses
+    dead = dataclasses.replace(
+        topo, bin_speed=np.array([1, 1, 1, 0], np.float32))
+    with pytest.raises(ValueError, match="zero-capacity"):
+        initial_partition_device(g, dead)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: device backend quality pinned to host
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("branching,seed", [
+    ((2, 4), 0), ((2, 4), 1), ((2, 4), 2),
+    ((2, 2, 2), 0), ((2, 2, 2), 1), ((2, 2, 2), 2),
+])
+def test_device_vcycle_within_5pct_of_host(branching, seed):
+    """The acceptance pin: device-backend makespan <= 1.05x the host path
+    on the same graph and seed, and the device result passes the
+    path-walking oracle cross-check."""
+    g = _rmat(2000, 8000, seed=0)
+    topo = balanced_tree(branching)
+    host = partition(g, topo, PartitionConfig(seed=seed))
+    dev = partition(g, topo, PartitionConfig(seed=seed, backend="device"))
+    verify(g, topo, dev)
+    assert dev.makespan <= 1.05 * host.makespan
+
+
+def test_partition_rejects_unknown_backend():
+    g = _rmat(50, 150)
+    with pytest.raises(ValueError, match="backend"):
+        partition(g, balanced_tree((2, 2)),
+                  PartitionConfig(backend="gpu"))
+
+
+# ---------------------------------------------------------------------------
+# kernel wrappers: interpret-mode Pallas parity with the XLA fallbacks
+# ---------------------------------------------------------------------------
+
+def test_match_keys_kernel_matches_xla_fallback():
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.default_rng(5)
+    for m in (1, 100, 4096, 10_001):
+        w = jnp.asarray(rng.random(m).astype(np.float32))
+        u = jnp.asarray(rng.random(m).astype(np.float32))
+        mask = jnp.asarray((rng.random(m) > 0.4).astype(np.float32))
+        xla = ops.match_keys(w, u, mask, pallas=False)
+        pal = ops.match_keys(w, u, mask, interpret=True)
+        np.testing.assert_allclose(np.asarray(xla), np.asarray(pal),
+                                   atol=1e-6)
+
+
+def test_bucket_assign_kernel_matches_xla_fallback():
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.default_rng(6)
+    for n, k in ((1, 2), (700, 3), (4096, 64), (5000, 257)):
+        nw = rng.random(n).astype(np.float32) + 0.1
+        cum = jnp.asarray(np.cumsum(nw) - 0.5 * nw)
+        bounds = jnp.asarray(
+            (np.cumsum(np.ones(k)) / k * nw.sum())[:-1].astype(np.float32))
+        xla = ops.bucket_assign(cum, bounds, k, pallas=False)
+        pal = ops.bucket_assign(cum, bounds, k, interpret=True)
+        np.testing.assert_array_equal(np.asarray(xla), np.asarray(pal))

@@ -321,6 +321,33 @@ def test_scheduler_invariants_under_fault_plans(chaos):
                 assert r.done_step == clean_done[r.rid].done_step
 
 
+@given(graphs(max_n=60), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_device_coarsening_invariants(g, seed):
+    """Device coarsening (coarsen_device): total node weight preserved at
+    every level, edge weight conserved up to the contracted intra-cluster
+    weight, node count strictly decreasing, and every fine_to_coarse a
+    total surjective map. (Manual multi-seed twin:
+    tests/test_device_vcycle.py, matching the existing fallback pattern.)"""
+    from repro.core.coarsen import coarsen_device
+    levels = coarsen_device(g, k=2, seed=seed, coarse_factor=1)
+    for li in range(1, len(levels)):
+        fg, cg = levels[li - 1].graph, levels[li].graph
+        assert cg.n_nodes < fg.n_nodes
+        np.testing.assert_allclose(cg.node_weight.sum(),
+                                   fg.node_weight.sum(), rtol=1e-5)
+        f2c = levels[li - 1].fine_to_coarse
+        assert f2c.shape == (fg.n_nodes,)
+        assert f2c.min() >= 0 and f2c.max() == cg.n_nodes - 1
+        assert np.unique(f2c).size == cg.n_nodes      # surjective
+        half = fg.senders < fg.receivers
+        intra = fg.edge_weight[half & (f2c[fg.senders]
+                                       == f2c[fg.receivers])].sum()
+        np.testing.assert_allclose(
+            cg.edge_weight[cg.senders < cg.receivers].sum(),
+            fg.edge_weight[half].sum() - intra, rtol=1e-4, atol=1e-5)
+
+
 @given(st.integers(0, 100))
 @settings(max_examples=20, deadline=None)
 def test_monotone_edge_addition(seed):
