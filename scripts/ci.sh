@@ -73,6 +73,17 @@ PYEOF
     --fault-plan "7:leaf_death:1" | tee /dev/stderr | \
     grep -q "attempts=2" || { echo "supervised restart did not run"; exit 1; }
   rm -rf "$ckpt_dir"
+  echo "== embed-sharded training smoke (repro.embed end-to-end) =="
+  # recsys cell with the full embed subsystem on: co-access probe ->
+  # partitioned item table on the heterogeneous preset -> sparse table
+  # updates -> hot-row-cache traffic report -> prefetched batch stream;
+  # the launcher prints the traffic comparison, the grep pins that the
+  # prefetcher genuinely ran ahead of the consumer
+  python -m repro.launch.train --arch two-tower-retrieval --smoke \
+    --steps 6 --batch 8 --embed-shard --embed-cache-rows 64 \
+    --prefetch 2 --embed-machine tpu-mixed-32 | tee /dev/stderr | \
+    grep -q "max_occupancy=[1-9]" || \
+    { echo "embed smoke: prefetcher never overlapped"; exit 1; }
   echo "== device V-cycle smoke (partition backend=device + sparse map) =="
   # the device front end end-to-end: jitted coarsening + capacity-prefix
   # initial through partition(), verified against the path-walking

@@ -13,6 +13,7 @@ nonzero when any finding reaches ``--severity`` (default ``error``).
     PYTHONPATH=src python -m repro.analysis --suite kernels
     PYTHONPATH=src python -m repro.analysis --suite serving
     PYTHONPATH=src python -m repro.analysis --suite faults
+    PYTHONPATH=src python -m repro.analysis --suite embed
     PYTHONPATH=src python -m repro.analysis --severity error \
         --json analysis_findings.json                        # the CI gate
     PYTHONPATH=src python -m repro.analysis --arch qwen2-72b --no-trace
@@ -157,6 +158,73 @@ def run_faults_suite() -> List[Finding]:
     return findings
 
 
+def run_embed_suite() -> List[Finding]:
+    """Embedding-subsystem lint (DESIGN.md §Embedding), host-side only:
+    a synthetic Zipf batch stream builds the row co-access graph, the
+    shard plan's structural invariants are checked (permutation inverse,
+    device-contiguity, capacity accounting), the co-access traffic matrix
+    must be ``lint_traffic``-lawful, and a driven hot-row cache must hold
+    every bookkeeping invariant and drain to zero pending updates."""
+    import numpy as np
+
+    from repro import embed
+    from repro.analysis import shard_lint
+    findings: List[Finding] = []
+    rng = np.random.default_rng(0)
+    V, E, D = 512, 16, 4
+    ranks = np.arange(1, V + 1, dtype=np.float64)
+    probs = ranks ** -1.1
+    probs /= probs.sum()
+    stats = embed.RowAccessStats(V)
+    for _ in range(8):
+        ids = rng.choice(V, size=(16, 8), p=probs)
+        drop = rng.random(ids.shape) < 0.2
+        stats.record(np.where(drop, -1, ids))
+    plan = embed.plan_shards(stats, n_devices=D)
+    try:
+        plan.check()
+    except AssertionError as exc:
+        findings.append(Finding(
+            "embed-plan", "error", "embed:plan",
+            f"shard plan invariant violated: {exc}"))
+        return findings
+    if not np.array_equal(np.bincount(plan.row_to_device, minlength=D),
+                          plan.shard_sizes):
+        findings.append(Finding(
+            "embed-plan", "error", "embed:plan",
+            "shard_sizes disagrees with the row assignment"))
+    findings.extend(shard_lint.lint_traffic(
+        stats.device_traffic(plan.row_to_device, D),
+        subject="embed:coaccess-traffic"))
+
+    table = rng.normal(0, 0.1, (V, E)).astype(np.float32)
+    st = embed.ShardedEmbeddingTable(table, plan)
+    cache = embed.HotRowCache(st, n_cache=32, policy="lru")
+    cache.warm(stats.top_rows(32))
+    accum = np.zeros(V, np.float32)
+    for _ in range(6):
+        ids = rng.choice(V, size=48, p=probs)
+        cache.lookup(ids)
+        rows = np.unique(ids)
+        grads = rng.normal(0, 1, (rows.shape[0], E)).astype(np.float32)
+        accum = cache.apply_grads(rows, grads, accum)
+        try:
+            cache.check_invariants()
+        except AssertionError as exc:
+            findings.append(Finding(
+                "embed-cache", "error", "embed:cache",
+                f"hot-row cache invariant violated: {exc}"))
+            return findings
+    cache.flush()
+    if cache.pending:
+        findings.append(Finding(
+            "embed-cache", "error", "embed:cache",
+            f"{len(cache.pending)} pending update(s) survived flush()"))
+    findings.extend(shard_lint.lint_traffic(
+        cache.traffic, subject="embed:cache-traffic"))
+    return findings
+
+
 def run_sharding_suite(archs, *, trace: bool = True) -> List[Finding]:
     from repro import configs
     from repro.analysis import shard_lint
@@ -176,7 +244,7 @@ def main(argv=None) -> int:
         description="static kernel/sharding verifier (no execution)")
     ap.add_argument("--suite",
                     choices=("all", "kernels", "sharding", "serving",
-                             "faults"),
+                             "faults", "embed"),
                     default="all")
     ap.add_argument("--severity", choices=analysis.SEVERITIES,
                     default="error",
@@ -203,6 +271,8 @@ def main(argv=None) -> int:
         findings.extend(run_serving_suite())
     if args.suite in ("all", "faults"):
         findings.extend(run_faults_suite())
+    if args.suite in ("all", "embed"):
+        findings.extend(run_embed_suite())
 
     shown = (analysis.at_least(findings, args.severity) if args.quiet
              else findings)

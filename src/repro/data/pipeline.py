@@ -96,7 +96,9 @@ def sample_fanout(g: Graph, seeds: np.ndarray, fanout: Tuple[int, ...],
         nz = deg > 0
         fr = frontier[nz]
         d = deg[nz]
-        offs = rng.integers(0, 2 ** 31, size=(fr.shape[0], f)) % d[:, None]
+        # exact per-row bound — a fixed-range draw mod degree over-weights
+        # low arc slots whenever 2**31 % deg != 0
+        offs = rng.integers(0, d[:, None], size=(fr.shape[0], f))
         arc = g.offsets[fr][:, None] + offs
         nbrs = g.receivers[arc]                    # [n_frontier, f]
         edges_u.append(np.repeat(fr, f))

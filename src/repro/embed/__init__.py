@@ -1,0 +1,28 @@
+"""repro.embed — partition-sharded sparse embedding tables.
+
+The subsystem that turns the recsys family into an end-to-end placement
+consumer (DESIGN.md §Embedding): measured row co-access graphs fed to the
+multilevel partitioner (``sharded_table``), a hot-row device cache whose
+hit/miss/traffic counters land in the same ``[D, D]`` matrix shape the
+mapping search scores (``hot_cache``), touched-rows-only optimizer
+updates bitwise-pinned to the dense path (``hot_cache`` / ``training``),
+and an async prefetching sampler overlapping host-side sampling with the
+jitted step (``prefetch``).
+"""
+from repro.embed.hot_cache import (HotRowCache, dense_row_update,
+                                   masked_row_update,
+                                   replicated_update_traffic, requester_of,
+                                   sparse_row_update)
+from repro.embed.prefetch import PrefetchIterator
+from repro.embed.sharded_table import (RowAccessStats, ShardedEmbeddingTable,
+                                       ShardPlan, identity_plan, plan_shards)
+from repro.embed.training import (EmbedConfig, init_dense_opt,
+                                  init_embed_state, make_embed_train_step)
+
+__all__ = [
+    "RowAccessStats", "ShardPlan", "ShardedEmbeddingTable", "plan_shards",
+    "identity_plan", "HotRowCache", "dense_row_update", "masked_row_update",
+    "sparse_row_update", "replicated_update_traffic", "requester_of",
+    "PrefetchIterator", "EmbedConfig", "init_embed_state", "init_dense_opt",
+    "make_embed_train_step",
+]

@@ -1,0 +1,349 @@
+"""Partition-sharded sparse embedding tables (rows-as-vertices).
+
+The recsys embedding table is the millions-of-users object the ROADMAP
+north star names: rows are vertices, co-access within one user history is
+an edge, measured access frequency is the vertex weight, and the bins are
+the leaves of the machine tree — exactly the pages-as-rows shape
+``PlacementSession.map_pages`` already feeds the multilevel partitioner.
+
+Three pieces:
+
+* :class:`RowAccessStats` — measures the row co-access graph from sampled
+  batches (bag rows form a clique, capped at ``max_clique`` ids per bag so
+  a 50-long history does not emit 1225 pairs);
+* :func:`plan_shards` — runs ``partition()`` over that graph on the
+  machine tree (capacity-proportional shares on heterogeneous presets via
+  ``bin_speed``) and returns a :class:`ShardPlan`: a row -> device
+  assignment realized as a device-contiguous row permutation, the same
+  stable-argsort idiom as ``PagedKVCache.apply_placement``;
+* :class:`ShardedEmbeddingTable` — the permuted table plus the old -> new
+  row translation lookups go through, with ``replicated()`` as the exact
+  inverse (pinned by test).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+class RowAccessStats:
+    """Measured row-access statistics over sampled batches.
+
+    ``record`` accepts id arrays of shape [B, H] (bags, -1 padding) or
+    [N] (point lookups — each id its own bag, so no co-access edges).
+    ``counts`` is the partitioner's vertex weight; the pair dict is the
+    co-access edge list.
+    """
+
+    def __init__(self, n_rows: int, max_clique: int = 16):
+        if n_rows < 1:
+            raise ValueError(f"n_rows must be >= 1, got {n_rows}")
+        self.n_rows = int(n_rows)
+        self.max_clique = int(max_clique)
+        self.counts = np.zeros(self.n_rows, dtype=np.float64)
+        self._pairs: Dict[Tuple[int, int], float] = {}
+        self.n_batches = 0
+
+    def record(self, ids) -> None:
+        ids = np.asarray(ids)
+        if ids.ndim == 1:
+            ids = ids[:, None]
+        if ids.ndim != 2:
+            raise ValueError(f"ids must be [B, H] or [N], got "
+                             f"{list(ids.shape)}")
+        self.n_batches += 1
+        for bag in ids:
+            rows = np.unique(bag[bag >= 0])
+            if rows.size == 0:
+                continue
+            if rows.max() >= self.n_rows:
+                raise ValueError(f"row id {int(rows.max())} outside table "
+                                 f"of {self.n_rows} rows")
+            self.counts[rows] += 1.0
+            clique = rows[:self.max_clique]
+            for i in range(clique.shape[0]):
+                for j in range(i + 1, clique.shape[0]):
+                    key = (int(clique[i]), int(clique[j]))
+                    self._pairs[key] = self._pairs.get(key, 0.0) + 1.0
+
+    @property
+    def n_pairs(self) -> int:
+        return len(self._pairs)
+
+    def pair_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(u, v, w) co-access edge list (u < v)."""
+        if not self._pairs:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z, np.zeros(0, dtype=np.float64)
+        keys = np.asarray(list(self._pairs.keys()), dtype=np.int64)
+        w = np.asarray(list(self._pairs.values()), dtype=np.float64)
+        return keys[:, 0], keys[:, 1], w
+
+    def top_rows(self, n: int) -> np.ndarray:
+        """The ``n`` most-accessed rows, hottest first (cache warm set)."""
+        n = min(int(n), self.n_rows)
+        order = np.argsort(-self.counts, kind="stable")
+        return order[:n]
+
+    def device_traffic(self, row_to_device: np.ndarray, n_devices: int,
+                       row_bytes: float = 1.0) -> np.ndarray:
+        """[D, D] symmetric zero-diagonal co-access bytes under an
+        assignment — the quotient of the co-access graph the partitioner
+        minimizes, in ``lint_traffic``-lawful shape."""
+        row_to_device = np.asarray(row_to_device, dtype=np.int64)
+        T = np.zeros((n_devices, n_devices), dtype=np.float64)
+        u, v, w = self.pair_arrays()
+        if u.size:
+            du, dv = row_to_device[u], row_to_device[v]
+            cross = du != dv
+            np.add.at(T, (du[cross], dv[cross]), w[cross] * row_bytes)
+            T = T + T.T
+        return T
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """One row -> device assignment realized as a device-contiguous
+    permutation. ``order`` is new -> old (gather the original table with
+    it), ``perm`` old -> new (translate original ids with it) — the exact
+    ``apply_placement`` convention."""
+    row_to_device: np.ndarray       # [V] device per ORIGINAL row id
+    n_devices: int
+    order: np.ndarray               # [V] new physical row -> old row id
+    perm: np.ndarray                # [V] old row id -> new physical row
+    offsets: np.ndarray             # [D + 1] shard boundaries (new order)
+    makespan: float
+    machine: Optional[str] = None
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.row_to_device.shape[0])
+
+    @property
+    def shard_sizes(self) -> np.ndarray:
+        """[D] rows per device."""
+        return np.diff(self.offsets)
+
+    def check(self) -> None:
+        """Structural invariants, raised on violation: ``perm`` is a
+        permutation inverse to ``order``, shards are contiguous in the
+        new order, offsets match the assignment's bincount."""
+        n, d = self.n_rows, self.n_devices
+        if sorted(self.perm.tolist()) != list(range(n)):
+            raise AssertionError("perm is not a permutation")
+        if not np.array_equal(self.perm[self.order], np.arange(n)):
+            raise AssertionError("perm is not the inverse of order")
+        dev_new = self.row_to_device[self.order]
+        if np.any(np.diff(dev_new) < 0):
+            raise AssertionError("shards are not device-contiguous")
+        sizes = np.bincount(self.row_to_device, minlength=d)
+        if not np.array_equal(np.cumsum(np.concatenate([[0], sizes])),
+                              self.offsets):
+            raise AssertionError("offsets inconsistent with assignment")
+
+
+def _capacity_blocks(nw: np.ndarray, topo) -> np.ndarray:
+    """Degenerate fallback (no co-access edges yet, or fewer rows than
+    bins): contiguous blocks whose *weighted* prefix tracks each bin's
+    capacity share — uniform machines reduce to map_pages' balanced
+    ``(arange(n) * k) // n`` split."""
+    n, k = nw.shape[0], topo.k
+    if topo.bin_speed is None:
+        return (np.arange(n) * k) // max(n, 1)
+    cap = np.asarray(topo.bin_speed, dtype=np.float64)
+    targets = np.cumsum(cap)[:-1] / cap.sum()
+    cum = (np.cumsum(nw) - 0.5 * nw) / max(float(nw.sum()), 1e-12)
+    part = np.searchsorted(targets, cum, side="right")
+    return np.clip(part, 0, k - 1)
+
+
+def _repair_capacity(part: np.ndarray, counts: np.ndarray, topo,
+                     slack: float) -> np.ndarray:
+    """Clamp per-bin ROW COUNTS to capacity-proportional targets.
+
+    The makespan partitioner balances weighted load and may empty a bin
+    outright when co-access dominates; an embedding deployment also has a
+    per-device MEMORY budget — each leaf must hold about its capacity
+    share of rows. Bins outside ``targets * (1 +- slack)`` donate their
+    coldest rows (smallest access count: moving them costs the least
+    co-access locality) to the neediest bin until every bin is inside.
+    """
+    part = np.asarray(part, dtype=np.int64).copy()
+    n, k = part.shape[0], topo.k
+    if n < k:
+        return part
+    cap = (np.asarray(topo.bin_speed, dtype=np.float64)
+           if topo.bin_speed is not None else np.ones(k))
+    targets = n * cap / cap.sum()
+    hi = np.maximum(np.ceil(targets * (1.0 + slack)), 1.0)
+    lo = np.maximum(np.floor(targets * (1.0 - slack)), 1.0)
+    sizes = np.bincount(part, minlength=k).astype(np.float64)
+    # coldest-first row order: recomputed views stay cheap under n moves
+    cold = np.argsort(counts, kind="stable")
+    for _ in range(2 * n):
+        under = sizes < lo
+        over = sizes > hi
+        if not under.any() and not over.any():
+            break
+        # neediest receiver; donor = most-over bin (else the fullest bin
+        # that can give a row up without dropping under its own floor)
+        dst = int(np.argmin(sizes / np.maximum(targets, 1e-12)))
+        if over.any():
+            src = int(np.argmax(np.where(over, sizes / targets, -1.0)))
+        else:
+            can_give = sizes > lo
+            if not can_give.any():
+                break
+            src = int(np.argmax(np.where(
+                can_give, sizes / np.maximum(targets, 1e-12), -1.0)))
+        if src == dst:
+            break
+        movable = cold[part[cold] == src]
+        if movable.size == 0:
+            break
+        part[movable[0]] = dst
+        sizes[src] -= 1.0
+        sizes[dst] += 1.0
+    return part
+
+
+def plan_shards(stats: RowAccessStats, *, machine=None,
+                n_devices: Optional[int] = None, seed: int = 0,
+                seeds: int = 1, balance_slack: float = 0.2) -> ShardPlan:
+    """Partition table rows over the machine tree's leaves.
+
+    Mirrors ``PlacementSession.map_pages`` (pages-as-rows): vertex weight
+    is the measured access count (floored so cold rows still spread), the
+    co-access pairs are the edges, and heterogeneous presets balance
+    ``comp(b)/speed(b)`` — the fast pod takes proportionally more hot
+    rows. Degenerate inputs fall back to capacity-proportional contiguous
+    blocks. Row COUNTS per bin are then clamped to the bin's capacity
+    share within ``balance_slack`` (:func:`_repair_capacity`) — device
+    memory is budgeted by rows, and the repair moves only the coldest
+    rows so the partitioner's hot-row co-location survives.
+    """
+    from repro.core import baselines
+    from repro.core import machine as machine_lib
+    from repro.core.partitioner import PartitionConfig, partition
+    from repro.core.topology import guess_tree
+    from repro.graph.graph import from_edges
+
+    spec = machine_lib.resolve(machine)
+    if spec is not None:
+        topo = spec.tree()
+    else:
+        if not n_devices or n_devices < 1:
+            raise ValueError("plan_shards needs a machine or n_devices")
+        topo = guess_tree(int(n_devices))
+    k = topo.k
+    n = stats.n_rows
+    nw = stats.counts.astype(np.float64)
+    # every row gets a positive weight so never-sampled rows still spread
+    nw = np.maximum(nw, max(float(nw.max()), 1.0) * 1e-3)
+    u, v, w = stats.pair_arrays()
+    g = (from_edges(n, u, v, w.astype(np.float32), nw.astype(np.float32))
+         if u.size else None)
+    if g is None or n <= k:
+        part = _capacity_blocks(nw, topo)
+    else:
+        res = partition(g, topo, PartitionConfig(seed=seed, seeds=seeds))
+        part = res.part
+    part = _repair_capacity(np.asarray(part, dtype=np.int64),
+                            stats.counts, topo, balance_slack)
+    makespan = (float(baselines.score_all(g, topo, part)["makespan"])
+                if g is not None else 0.0)
+    order = np.argsort(part, kind="stable")          # new -> old
+    perm = np.empty(n, dtype=np.int64)               # old -> new
+    perm[order] = np.arange(n)
+    sizes = np.bincount(part, minlength=k)
+    offsets = np.cumsum(np.concatenate([[0], sizes]))
+    return ShardPlan(row_to_device=part, n_devices=int(k), order=order,
+                     perm=perm, offsets=offsets, makespan=makespan,
+                     machine=spec.name if spec is not None else None)
+
+
+def identity_plan(n_rows: int, n_devices: int = 1) -> ShardPlan:
+    """Replicated/no-op plan: every row on device 0 of a 1-bin machine
+    (or balanced blocks for ``n_devices > 1``), identity permutation."""
+    part = (np.arange(n_rows) * n_devices) // max(n_rows, 1)
+    order = np.arange(n_rows, dtype=np.int64)
+    sizes = np.bincount(part, minlength=n_devices)
+    return ShardPlan(row_to_device=part.astype(np.int64),
+                     n_devices=int(n_devices), order=order,
+                     perm=order.copy(),
+                     offsets=np.cumsum(np.concatenate([[0], sizes])),
+                     makespan=0.0)
+
+
+class ShardedEmbeddingTable:
+    """The device-contiguous permuted table plus the id translation.
+
+    ``data[plan.perm[i]]`` is original row ``i`` — lookups translate ids
+    through ``perm`` exactly once, so a multi-device pool would shard
+    ``data``'s row axis into contiguous per-device runs with no further
+    indirection on the hot path.
+    """
+
+    def __init__(self, table, plan: ShardPlan, *, permuted: bool = False):
+        import jax.numpy as jnp
+        table = jnp.asarray(table)
+        if table.shape[0] != plan.n_rows:
+            raise ValueError(f"table has {table.shape[0]} rows, plan "
+                             f"covers {plan.n_rows}")
+        self.plan = plan
+        self.data = (table if permuted
+                     else jnp.take(table, jnp.asarray(plan.order), axis=0))
+        self._perm = jnp.asarray(plan.perm)
+
+    @property
+    def n_rows(self) -> int:
+        return self.plan.n_rows
+
+    @property
+    def dim(self) -> int:
+        return int(self.data.shape[1])
+
+    @property
+    def row_bytes(self) -> int:
+        return self.dim * self.data.dtype.itemsize
+
+    def translate(self, ids):
+        """Original ids -> physical rows (negative padding preserved)."""
+        import jax.numpy as jnp
+        safe = jnp.maximum(ids, 0)
+        return jnp.where(ids >= 0, self._perm[safe], ids)
+
+    def lookup(self, ids):
+        """[...,] original ids -> [..., E] rows (ids must be >= 0)."""
+        import jax.numpy as jnp
+        return jnp.take(self.data, self._perm[ids], axis=0)
+
+    def lookup_bags(self, ids, weights, pallas=None, interpret=None):
+        """[B, H] bags (-1 padding, per-slot weights) -> [B, E] via the
+        fused gather-combine kernel (XLA einsum off-TPU)."""
+        import jax.numpy as jnp
+        from repro.kernels import ops as kops
+        safe = jnp.maximum(ids, 0)
+        return kops.gather_combine(self.data, self._perm[safe], weights,
+                                   pallas=pallas, interpret=interpret)
+
+    def update_rows(self, ids, values) -> None:
+        """Scatter new values into rows named by ORIGINAL ids."""
+        import jax.numpy as jnp
+        ids = jnp.asarray(ids)
+        self.data = self.data.at[self._perm[ids]].set(values)
+
+    def replicated(self):
+        """The full table back in original row order (inverse of the
+        placement permutation; pinned bitwise by test)."""
+        import jax.numpy as jnp
+        return jnp.take(self.data, self._perm, axis=0)
+
+    def device_of(self, ids) -> np.ndarray:
+        """Owning device per ORIGINAL row id (host-side)."""
+        return self.plan.row_to_device[np.asarray(ids)]
+
+    def rows_per_device(self) -> np.ndarray:
+        return self.plan.shard_sizes

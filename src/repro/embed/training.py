@@ -1,0 +1,87 @@
+"""Sparse-update train step for embedding-table params.
+
+``make_embed_train_step`` splits the param tree: dense params (towers)
+keep AdamW exactly as ``train/steps.py:make_train_step``; the named
+embedding tables take the rowwise-Adagrad *masked* update
+(``hot_cache.masked_row_update``) — touched rows step, untouched rows
+are selected bitwise unchanged, no dynamic shapes under jit. The
+per-table accumulator is the ``embed_state`` the train loop threads
+through every step and checkpoints next to the optimizer state (same
+pattern as the int8 compression residual).
+
+Bitwise pin (tests/test_embed.py): one step of this path equals one step
+of the dense path (``sparse=False``: plain ``dense_row_update`` on the
+full table) on the same batch, bit for bit — sparse is an optimization,
+never a numerics change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.embed.hot_cache import dense_row_update, masked_row_update
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedConfig:
+    """Which params are tables and how their rows step."""
+    tables: Tuple[str, ...] = ("item_table", "cat_table")
+    lr: float = 0.05
+    eps: float = 1e-8
+    sparse: bool = True      # masked touched-rows update vs dense
+
+    def split(self, tree: Dict[str, Any]):
+        dense = {k: v for k, v in tree.items() if k not in self.tables}
+        tables = {k: tree[k] for k in self.tables if k in tree}
+        return dense, tables
+
+
+def init_embed_state(params: Dict[str, Any],
+                     cfg: EmbedConfig) -> Dict[str, jnp.ndarray]:
+    """One fp32 Adagrad accumulator scalar per table row."""
+    return {name: jnp.zeros(params[name].shape[0], jnp.float32)
+            for name in cfg.tables if name in params}
+
+
+def init_dense_opt(params: Dict[str, Any], cfg: EmbedConfig,
+                   ocfg: adamw.AdamWConfig) -> adamw.OptState:
+    """AdamW state over the NON-table subtree only (tables carry the
+    rowwise accumulator instead — full moments would defeat the point
+    of sparse updates)."""
+    dense, _ = cfg.split(params)
+    return adamw.init(dense, ocfg)
+
+
+def make_embed_train_step(loss_fn: Callable, ocfg: adamw.AdamWConfig,
+                          ecfg: EmbedConfig) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics).
+
+    Returns ``step(params, opt_state, embed_state, batch) ->
+    (params, opt_state, embed_state, metrics)`` — the signature the
+    train loop threads when ``LoopConfig.embed_sparse`` is set.
+    ``opt_state`` must come from :func:`init_dense_opt`.
+    """
+    row_update = masked_row_update if ecfg.sparse else dense_row_update
+
+    def step(params, opt_state, embed_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        dense_g, table_g = ecfg.split(grads)
+        dense_p, _ = ecfg.split(params)
+        new_dense, opt_state, om = adamw.update(dense_g, opt_state,
+                                                dense_p, ocfg)
+        new_params = dict(params)
+        new_params.update(new_dense)
+        new_state = dict(embed_state)
+        for name, g in table_g.items():
+            new_params[name], new_state[name] = row_update(
+                params[name], embed_state[name], g,
+                lr=ecfg.lr, eps=ecfg.eps)
+        return new_params, opt_state, new_state, {"loss": loss, **aux,
+                                                  **om}
+
+    return step

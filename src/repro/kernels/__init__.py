@@ -13,6 +13,8 @@ Kernels:
   * ``bsr_spmm`` — block-sparse message passing (scalar-prefetched BSR);
     the op whose locality the partitioner's reordering improves.
   * ``bag_combine`` — embedding-bag weighted reduction (recsys lookup).
+  * ``gather_combine`` — fused gather + bag combine with scalar-prefetched
+    row ids (the sharded-embedding lookup: no [B, D, F] materialization).
   * ``flash_attention`` — fused online-softmax attention forward — VMEM
     score tiles, GQA via BlockSpec index maps; the LM hot spot whose HBM
     traffic the roofline memory term models.
@@ -33,8 +35,8 @@ from typing import Callable, Dict
 
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels import (bag_combine, bsr_spmm, bucket_assign,
-                           flash_attention, match_keys, partition_gain,
-                           quotient_link_loads)
+                           flash_attention, gather_combine, match_keys,
+                           partition_gain, quotient_link_loads)
 from repro.kernels.plan import KernelPlan  # noqa: F401
 
 # kernel name (= module stem) -> zero-arg plan builder at small
@@ -43,6 +45,7 @@ KERNEL_REGISTRY: Dict[str, Callable[[], KernelPlan]] = {
     "flash_attention": flash_attention.example_plan,
     "bsr_spmm": bsr_spmm.example_plan,
     "bag_combine": bag_combine.example_plan,
+    "gather_combine": gather_combine.example_plan,
     "partition_gain": partition_gain.example_plan,
     "quotient_link_loads": quotient_link_loads.example_plan,
     "match_keys": match_keys.example_plan,

@@ -23,6 +23,7 @@ import numpy as np
 from repro.kernels import bag_combine as _bag
 from repro.kernels import bsr_spmm as _bsr
 from repro.kernels import bucket_assign as _ba
+from repro.kernels import gather_combine as _gc
 from repro.kernels import match_keys as _mk
 from repro.kernels import partition_gain as _pg
 from repro.kernels import quotient_link_loads as _qll
@@ -207,3 +208,26 @@ def embedding_bag(table: jnp.ndarray, idx: jnp.ndarray, weights: jnp.ndarray,
         return _bag.bag_combine(gathered, weights.astype(gathered.dtype),
                                 interpret=interpret)
     return jnp.einsum("bdf,bd->bf", gathered, weights.astype(gathered.dtype))
+
+
+# ---------------------------------------------------------------------------
+# gather_combine: fused embedding_bag (no [B, D, F] materialization)
+# ---------------------------------------------------------------------------
+
+def gather_combine(table: jnp.ndarray, idx: jnp.ndarray,
+                   weights: jnp.ndarray,
+                   pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """[V, F] table, [B, D] row ids, [B, D] weights -> [B, F]. The fused
+    scalar-prefetch kernel gathers each row tile straight into VMEM; the
+    XLA path is the plain gather + einsum (same contract as
+    ``embedding_bag``)."""
+    if pallas is None:
+        pallas = use_pallas()
+    if pallas or interpret:
+        if interpret is None:
+            interpret = not use_pallas()
+        return _gc.gather_combine(table, idx, weights,
+                                  interpret=interpret)
+    return jnp.einsum("bdf,bd->bf", table[idx],
+                      weights.astype(table.dtype))

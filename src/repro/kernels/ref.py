@@ -52,3 +52,11 @@ def embedding_bag_ref(table: jnp.ndarray, idx: jnp.ndarray,
                       weights: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("bdf,bd->bf", table[idx],
                       weights.astype(table.dtype))
+
+
+def gather_combine_ref(table: jnp.ndarray, idx: jnp.ndarray,
+                       weights: jnp.ndarray) -> jnp.ndarray:
+    """Same contract as embedding_bag: the fused kernel must match the
+    gather-then-combine formulation exactly."""
+    return jnp.einsum("bdf,bd->bf", table[idx],
+                      weights.astype(table.dtype))

@@ -26,6 +26,16 @@ checkpointed, restored on resume).
 failure and runs under ``loop.run_supervised``: the machine model is
 degraded, the newest checkpoint is restored onto the survivors, and the
 stitched loss trajectory stays continuous (DESIGN.md §Fault-tolerance).
+
+``--embed-shard`` (recsys only) turns on the ``repro.embed`` subsystem
+(DESIGN.md §Embedding): probe batches build the row co-access graph, the
+makespan partitioner shards the item table capacity-proportionally over
+the ``--embed-machine`` model (a modeling choice — it need not match the
+local device count), the table is permuted device-contiguous and the
+loop steps with touched-rows-only rowwise Adagad (mutually exclusive
+with ``--grad-compress``). ``--embed-cache-rows N`` reports the measured
+hot-row-cache traffic vs the replicated baseline; ``--prefetch D`` wraps
+the batch stream in the async double-buffered sampler.
 """
 from __future__ import annotations
 
@@ -58,6 +68,44 @@ def make_batches(arch, cfg, batch: int, seq: int):
         gen = gnn_gen()
     for b in gen:
         yield {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def probe_embed_stats(cfg, n_rows: int, batch: int, n_batches: int):
+    """Replay the training pipeline's first batches (same seed) into a
+    row co-access measurement for the table partitioner."""
+    from repro import embed
+    stats = embed.RowAccessStats(n_rows)
+    gen = pipeline.recsys_batches(cfg.n_items, cfg.n_cats, batch,
+                                  cfg.hist_len, cfg.d_dense)
+    for b in itertools.islice(gen, n_batches):
+        stats.record(b["user_hist"])
+        stats.record(b["item_id"])
+    return stats
+
+
+def embed_traffic_report(stats, plan, table, cfg, batch: int,
+                         cache_rows: int, n_batches: int):
+    """Drive the hot-row cache over the probe stream; returns the cache
+    (measured [D, D] traffic inside) and the replicated baseline matrix."""
+    from repro import embed
+    st = embed.ShardedEmbeddingTable(table, plan, permuted=True)
+    cache = embed.HotRowCache(st, n_cache=cache_rows, policy="lru")
+    if cache_rows:
+        cache.warm(stats.top_rows(cache_rows))
+    rep = np.zeros((plan.n_devices, plan.n_devices))
+    gen = pipeline.recsys_batches(cfg.n_items, cfg.n_cats, batch,
+                                  cfg.hist_len, cfg.d_dense)
+    for b in itertools.islice(gen, n_batches):
+        hist = np.asarray(b["user_hist"])
+        req_row = embed.requester_of(hist.shape[0], plan.n_devices)
+        valid = hist >= 0
+        ids = hist[valid]
+        req = np.broadcast_to(req_row[:, None], hist.shape)[valid]
+        cache.lookup(ids, req)
+        rep += embed.replicated_update_traffic(ids, req, plan.n_devices,
+                                               st.row_bytes)
+    cache.check_invariants()
+    return cache, rep
 
 
 def searched_mesh(step, step_args, mesh, scan_lengths, map_restarts=32,
@@ -127,6 +175,24 @@ def main() -> None:
     ap.add_argument("--max-restarts", type=int, default=4,
                     help="supervisor restart budget before the injected "
                          "failure propagates")
+    ap.add_argument("--embed-shard", action="store_true",
+                    help="recsys only: partition the item table by the "
+                         "measured row co-access graph (repro.embed), "
+                         "permute it device-contiguous, and train with "
+                         "touched-rows-only sparse table updates")
+    ap.add_argument("--embed-cache-rows", type=int, default=0,
+                    help="with --embed-shard: hot-row cache slots for the "
+                         "lookup-traffic report (0 = no cache)")
+    ap.add_argument("--embed-probe-batches", type=int, default=4,
+                    help="batches probed to build the co-access graph")
+    ap.add_argument("--embed-machine", default=None,
+                    help="machine model the table is sharded against "
+                         "(defaults to --machine, else the local device "
+                         "count); a modeling choice — its mesh need not "
+                         "fit the local devices")
+    ap.add_argument("--prefetch", type=int, default=0, metavar="DEPTH",
+                    help="async batch prefetch depth (0 = off; 2 = "
+                         "double buffering)")
     args = ap.parse_args()
     grad_compress = args.grad_compress_block or args.grad_compress
 
@@ -162,18 +228,66 @@ def main() -> None:
 
     ocfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
                              warmup_steps=min(20, args.steps // 10))
-    opt = adamw.init(params, ocfg)
-    step = jax.jit(make_train_step(
-        lambda p, b: mdl.loss_fn(p, b, cfg, rules), ocfg,
-        grad_compress=grad_compress))
+    ecfg = False
+    if args.embed_shard:
+        if arch.family != "recsys":
+            raise SystemExit("--embed-shard requires a recsys arch")
+        if grad_compress:
+            raise SystemExit("--embed-shard and --grad-compress are "
+                             "mutually exclusive")
+        from repro import embed
+        from repro.embed import training as embed_training
+        stats = probe_embed_stats(cfg, params["item_table"].shape[0],
+                                  args.batch, args.embed_probe_batches)
+        emachine = machine_lib.resolve(args.embed_machine)
+        if emachine is None:
+            emachine = machine
+        embed_plan = embed.plan_shards(
+            stats, machine=emachine,
+            n_devices=None if emachine is not None else n_dev)
+        embed_plan.check()
+        params["item_table"] = jnp.take(
+            jnp.asarray(params["item_table"]),
+            jnp.asarray(embed_plan.order), axis=0)
+        row_perm = jnp.asarray(embed_plan.perm)
+        ecfg = embed_training.EmbedConfig()
+        opt = embed_training.init_dense_opt(params, ecfg, ocfg)
+        step = jax.jit(embed_training.make_embed_train_step(
+            lambda p, b: mdl.loss_fn(p, b, cfg, rules, row_perm),
+            ocfg, ecfg))
+        sizes = embed_plan.shard_sizes
+        print(f"embed: {embed_plan.n_rows} rows over "
+              f"{embed_plan.n_devices} leaves of "
+              f"{embed_plan.machine or 'local'} (rows/leaf "
+              f"{int(sizes.min())}..{int(sizes.max())}, makespan "
+              f"{embed_plan.makespan:.3e})")
+        cache, rep = embed_traffic_report(
+            stats, embed_plan, params["item_table"], cfg, args.batch,
+            args.embed_cache_rows, args.embed_probe_batches)
+        print(f"embed traffic: replicated {rep.sum() / 2:.0f} B -> "
+              f"sharded+cache({args.embed_cache_rows}) "
+              f"{cache.traffic_bytes():.0f} B "
+              f"(hit rate {cache.hit_rate:.2f})")
+    else:
+        opt = adamw.init(params, ocfg)
+        step = jax.jit(make_train_step(
+            lambda p, b: mdl.loss_fn(p, b, cfg, rules), ocfg,
+            grad_compress=grad_compress))
 
     batches = make_batches(arch, cfg, args.batch, args.seq)
+    if args.prefetch:
+        from repro.embed import PrefetchIterator
+        batches = PrefetchIterator(batches, depth=args.prefetch)
     if args.topology_aware and n_dev > 1:
         batch0 = next(batches)
         batches = itertools.chain([batch0], batches)
         if grad_compress:
             from repro.dist import compress
             probe_args = (params, opt, compress.init_state(params), batch0)
+        elif ecfg:
+            probe_args = (params, opt,
+                          embed_training.init_embed_state(params, ecfg),
+                          batch0)
         else:
             probe_args = (params, opt, batch0)
         scan_lengths = [getattr(cfg, "n_layers", 1)]
@@ -187,7 +301,8 @@ def main() -> None:
     lcfg = loop.LoopConfig(total_steps=args.steps,
                            ckpt_every=args.ckpt_every,
                            ckpt_dir=args.ckpt_dir,
-                           grad_compress=grad_compress)
+                           grad_compress=grad_compress,
+                           embed_sparse=ecfg)
     if args.fault_plan:
         from repro.resilience.faults import parse_fault_plan
         plan = parse_fault_plan(args.fault_plan)
@@ -213,6 +328,11 @@ def main() -> None:
     print(f"steps={result.steps_run} resumed_from={result.resumed_from} "
           f"loss {result.losses[0]:.4f} -> {result.losses[-1]:.4f} "
           f"({result.seconds:.1f}s, stragglers={result.straggler_steps})")
+    if getattr(batches, "is_prefetcher", False):
+        s = batches.stats()
+        print(f"prefetch: depth={s['depth']} produced={s['produced']} "
+              f"ready_hits={s['ready_hits']} "
+              f"max_occupancy={s['max_occupancy']}")
 
 
 if __name__ == "__main__":

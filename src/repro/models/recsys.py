@@ -20,7 +20,8 @@ Batch dicts:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+import math
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,8 +56,12 @@ class TwoTowerConfig:
         return emb + mlps
 
 
-def _row_pad(n: int, m: int = 512) -> int:
-    """Tables padded to the multi-pod device count so row sharding divides."""
+def _row_pad(n: int, m: Optional[int] = None) -> int:
+    """Tables padded so row sharding divides the actual device count AND
+    rows stay 8-sublane aligned (the old hardcoded 512 over-padded tiny
+    smoke tables ~50x on a 1-device host)."""
+    if m is None:
+        m = math.lcm(max(len(jax.devices()), 1), 8)
     return (n + m - 1) // m * m
 
 
@@ -82,34 +87,46 @@ def init(key, cfg: TwoTowerConfig, rules: Rules) -> Tuple[Params, Params]:
     return p, s
 
 
-def _bag_lookup(table: jnp.ndarray, ids: jnp.ndarray,
-                rules: Rules) -> jnp.ndarray:
-    """Mean-combine embedding bag; ids [B, H] with -1 padding."""
+def _bag_lookup(table: jnp.ndarray, ids: jnp.ndarray, rules: Rules,
+                row_perm: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean-combine embedding bag; ids [B, H] with -1 padding.
+    ``row_perm`` [V] maps original -> physical row when the table has been
+    permuted device-contiguous by an embed shard plan."""
     valid = (ids >= 0)
     safe = jnp.maximum(ids, 0)
+    if row_perm is not None:
+        safe = row_perm[safe]
     lens = jnp.maximum(valid.sum(-1, keepdims=True), 1)
     w = valid.astype(table.dtype) / lens.astype(table.dtype)
-    return kops.embedding_bag(table, safe, w, pallas=False)
+    return kops.embedding_bag(table, safe, w)
 
 
-def user_embed(p: Params, batch, cfg: TwoTowerConfig, rules: Rules):
-    hist = _bag_lookup(p["item_table"], batch["user_hist"], rules)
+def user_embed(p: Params, batch, cfg: TwoTowerConfig, rules: Rules,
+               row_perm: Optional[jnp.ndarray] = None):
+    hist = _bag_lookup(p["item_table"], batch["user_hist"], rules, row_perm)
     z = jnp.concatenate([hist, batch["user_dense"].astype(cfg.dtype)], -1)
     u = mlp_apply(p["user_tower"], z)
     return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
 
 
-def item_embed(p: Params, batch, cfg: TwoTowerConfig, rules: Rules):
-    it = jnp.take(p["item_table"], batch["item_id"], axis=0)
+def item_embed(p: Params, batch, cfg: TwoTowerConfig, rules: Rules,
+               row_perm: Optional[jnp.ndarray] = None):
+    item_id = batch["item_id"]
+    if row_perm is not None:
+        item_id = row_perm[item_id]
+    it = jnp.take(p["item_table"], item_id, axis=0)
     ct = jnp.take(p["cat_table"], batch["item_cat"], axis=0)
     v = mlp_apply(p["item_tower"], jnp.concatenate([it, ct], -1))
     return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
 
 
-def loss_fn(params: Params, batch, cfg: TwoTowerConfig, rules: Rules):
+def loss_fn(params: Params, batch, cfg: TwoTowerConfig, rules: Rules,
+            row_perm: Optional[jnp.ndarray] = None):
     """In-batch sampled softmax with logQ correction (Yi et al. '19)."""
-    u = rules.shard(user_embed(params, batch, cfg, rules), "batch", None)
-    v = rules.shard(item_embed(params, batch, cfg, rules), "batch", None)
+    u = rules.shard(user_embed(params, batch, cfg, rules, row_perm),
+                    "batch", None)
+    v = rules.shard(item_embed(params, batch, cfg, rules, row_perm),
+                    "batch", None)
     logits = (u @ v.T) / cfg.temperature                 # [B, B]
     logits = rules.shard(logits, "batch", "model")
     # logQ: in-batch negatives are sampled ∝ item frequency
@@ -126,18 +143,20 @@ def loss_fn(params: Params, batch, cfg: TwoTowerConfig, rules: Rules):
     return loss, {"ce": loss, "acc": acc}
 
 
-def score(params: Params, batch, cfg: TwoTowerConfig, rules: Rules):
+def score(params: Params, batch, cfg: TwoTowerConfig, rules: Rules,
+          row_perm: Optional[jnp.ndarray] = None):
     """Pointwise serving: score[b] = <u_b, v_b>. [B]"""
-    u = user_embed(params, batch, cfg, rules)
-    v = item_embed(params, batch, cfg, rules)
+    u = user_embed(params, batch, cfg, rules, row_perm)
+    v = item_embed(params, batch, cfg, rules, row_perm)
     return jnp.sum(u * v, axis=-1)
 
 
 def retrieve(params: Params, batch, cfg: TwoTowerConfig, rules: Rules,
-             top_k: int = 1024):
+             top_k: int = 1024,
+             row_perm: Optional[jnp.ndarray] = None):
     """One query against a precomputed candidate matrix [N_cand, D]:
     batched dot + top-k (no loops; candidates row-sharded)."""
-    u = user_embed(params, batch, cfg, rules)            # [1, D]
+    u = user_embed(params, batch, cfg, rules, row_perm)  # [1, D]
     cand = rules.shard(batch["cand_emb"].astype(cfg.dtype), "cand", None)
     scores = (cand @ u[0]).astype(jnp.float32)           # [N_cand]
     vals, idx = jax.lax.top_k(scores, top_k)

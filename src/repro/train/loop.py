@@ -60,6 +60,13 @@ class LoopConfig:
     # int is the per-block scale size (informational here — the block is
     # baked into the step closure; the loop only checks truthiness).
     grad_compress: Any = False
+    # sparse embedding-table optimizer state (repro.embed): truthy holds
+    # the EmbedConfig whose per-table Adagrad accumulators the loop owns —
+    # initialized from params, threaded through every step (the step_fn
+    # must come from make_embed_train_step), checkpointed/restored next to
+    # params/opt_state. Mutually exclusive with grad_compress (the two
+    # step signatures differ).
+    embed_sparse: Any = False
 
 
 @dataclasses.dataclass
@@ -102,15 +109,25 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
     fully replicated."""
     saver = ckpt.AsyncSaver()
     cstate = None
+    if cfg.grad_compress and cfg.embed_sparse:
+        raise ValueError("grad_compress and embed_sparse are mutually "
+                         "exclusive (different step signatures)")
     if cfg.grad_compress:
         from repro.dist import compress
         cstate = compress.init_state(params)
+    estate = None
+    if cfg.embed_sparse:
+        from repro.embed import training as embed_training
+        estate = embed_training.init_embed_state(params, cfg.embed_sparse)
     resumed_from = None
     start = step_offset
 
     def state_tuple():
-        return ((params, opt_state, cstate) if cfg.grad_compress
-                else (params, opt_state))
+        if cfg.grad_compress:
+            return (params, opt_state, cstate)
+        if cfg.embed_sparse:
+            return (params, opt_state, estate)
+        return (params, opt_state)
 
     def _restore(like, latest):
         if state_specs is not None and mesh is not None:
@@ -127,15 +144,18 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
             try:
                 restored = _restore(state_tuple(), latest)
             except ValueError:
-                if not cfg.grad_compress:
+                if not (cfg.grad_compress or cfg.embed_sparse):
                     raise
-                # checkpoint predates grad_compress (no residual leaves):
-                # restore (params, opt_state) and restart error feedback
-                # from a zero residual
+                # checkpoint predates the extra loop state (residual /
+                # embed accumulators): restore (params, opt_state) and
+                # restart that state from zeros
                 restored = _restore((params, opt_state), latest)
-                restored = restored + (cstate,)
+                restored = restored + ((cstate,) if cfg.grad_compress
+                                       else (estate,))
             if cfg.grad_compress:
                 params, opt_state, cstate = restored
+            elif cfg.embed_sparse:
+                params, opt_state, estate = restored
             else:
                 params, opt_state = restored
             start = latest
@@ -168,6 +188,9 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
                 if cfg.grad_compress:
                     params, opt_state, cstate, metrics = step_fn(
                         params, opt_state, cstate, batch)
+                elif cfg.embed_sparse:
+                    params, opt_state, estate, metrics = step_fn(
+                        params, opt_state, estate, batch)
                 else:
                     params, opt_state, metrics = step_fn(params, opt_state,
                                                          batch)
@@ -182,6 +205,11 @@ def run(step_fn: Callable, params: Any, opt_state: Any,
                     ckpt.prune(cfg.ckpt_dir, cfg.keep_ckpts)
     finally:
         saver.join()
+        # stop a PrefetchIterator's producer thread (NOT generic .close():
+        # plain generators have one too, and run_supervised replays bare
+        # iterators across restart attempts)
+        if getattr(batches, "is_prefetcher", False):
+            batches.close()
     if cfg.ckpt_dir:
         ckpt.save(cfg.ckpt_dir, cfg.total_steps, state_tuple())
         ckpt.prune(cfg.ckpt_dir, cfg.keep_ckpts)

@@ -348,6 +348,66 @@ def test_device_coarsening_invariants(g, seed):
             fg.edge_weight[half].sum() - intra, rtol=1e-4, atol=1e-5)
 
 
+@st.composite
+def cache_workloads(draw):
+    """Random embedding-cache workloads (table size, pool size, device
+    count, lookup/update stream seed; a manual seeded sweep of the same
+    property runs in tests/test_embed.py so CI covers it when hypothesis
+    is absent)."""
+    v = draw(st.integers(8, 60))
+    n_cache = draw(st.integers(0, 10))
+    n_devices = draw(st.integers(1, 5))
+    policy = draw(st.sampled_from(["lru", "static"]))
+    seed = draw(st.integers(0, 2 ** 16))
+    return v, n_cache, n_devices, policy, seed
+
+
+@given(cache_workloads())
+@settings(max_examples=40, deadline=None)
+def test_embed_cache_invariants(wl):
+    """Hot-row cache under random lookup/update streams: no row lives in
+    two shards, hits + misses == lookups after every call, eviction never
+    loses a pending update (the flushed replicated table and accumulator
+    bitwise-match the dense-update oracle), and the traffic matrix stays
+    symmetric / zero-diagonal / finite."""
+    from repro.embed import (HotRowCache, RowAccessStats,
+                             ShardedEmbeddingTable, dense_row_update,
+                             plan_shards)
+    v, n_cache, n_devices, policy, seed = wl
+    rng = np.random.default_rng(seed)
+    e = 4
+    stats = RowAccessStats(v)
+    for _ in range(3):
+        stats.record(rng.integers(0, v, (4, 3)))
+    plan = plan_shards(stats, n_devices=n_devices)
+    # no row in two shards: the assignment is a total function and the
+    # device-contiguous permutation covers every row exactly once
+    plan.check()
+    assert np.array_equal(np.sort(plan.order), np.arange(v))
+    table = jnp.asarray(rng.normal(0, 1, (v, e)).astype(np.float32))
+    cache = HotRowCache(ShardedEmbeddingTable(table, plan),
+                        n_cache=n_cache, policy=policy)
+    cache.warm(stats.top_rows(n_cache))
+    accum = jnp.zeros(v, jnp.float32)
+    ref_tbl, ref_acc = table, jnp.zeros(v, jnp.float32)
+    for _ in range(5):
+        ids = rng.integers(0, v, int(rng.integers(1, 12)))
+        vals = cache.lookup(ids)
+        assert np.array_equal(np.asarray(vals), np.asarray(ref_tbl)[ids])
+        rows = np.unique(ids)
+        g = rng.normal(0, 1, (rows.shape[0], e)).astype(np.float32)
+        accum = cache.apply_grads(rows, g, accum)
+        gd = jnp.zeros((v, e), jnp.float32).at[jnp.asarray(rows)].set(
+            jnp.asarray(g))
+        ref_tbl, ref_acc = dense_row_update(ref_tbl, ref_acc, gd)
+        assert cache.hits + cache.misses == cache.lookups
+        cache.check_invariants()
+    rep = cache.replicated()
+    assert not cache.pending
+    assert np.array_equal(np.asarray(rep), np.asarray(ref_tbl))
+    assert np.array_equal(np.asarray(accum), np.asarray(ref_acc))
+
+
 @given(st.integers(0, 100))
 @settings(max_examples=20, deadline=None)
 def test_monotone_edge_addition(seed):
